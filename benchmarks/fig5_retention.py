@@ -1,0 +1,78 @@
+"""Fig 5 reproduction: per-operation data lifetimes vs device retention.
+
+The paper's Fig 5 plots write frequency against retention for Si-GCRAM
+(flat) and Hybrid-GCRAM (declining past a knee), and places LLM
+subroutines on it: GEMMs fall under Si-GCRAM's retention (refresh-free),
+transpose/residual land between the two devices, normalization exceeds
+both.  We reproduce the placement from kernel-attributed lifetimes of a
+llama-style op stream.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.backends.cachesim import simulate_hierarchy
+from repro.backends.opstream import StreamBuilder, transformer_ops
+from repro.core import (HYBRID_GCRAM, SI_GCRAM, compute_stats)
+
+
+def per_op_lifetimes():
+    """kernel-type -> (mean lifetime s, write freq Hz) on the L1 trace."""
+    sb = StreamBuilder(sample=8)
+    transformer_ops(sb, d_model=2048, n_heads=32, kv_heads=8, d_ff=8192,
+                    seq=96, n_layers=2)
+    t, a, w = sb.finish()
+    trace = simulate_hierarchy(t, a, w)
+    t0 = np.asarray(trace.time_cycles)
+    sub0 = np.asarray(trace.subpartition) == 0
+
+    groups = {}
+    for k in sb.kernels:
+        groups.setdefault(k.op, []).append(k)
+
+    out = {}
+    for op, ks in groups.items():
+        m = np.zeros(len(t0), bool)
+        for k in ks:
+            m |= (t0 >= k.start) & (t0 < k.start + k.cycles)
+        m &= sub0
+        if m.sum() < 4:
+            continue
+        sl = type(trace)(
+            time_cycles=t0[m], addr=np.asarray(trace.addr)[m],
+            is_write=np.asarray(trace.is_write)[m],
+            hit=np.asarray(trace.hit)[m],
+            subpartition=np.asarray(trace.subpartition)[m],
+            clock_hz=trace.clock_hz, block_bits=trace.block_bits,
+            names=trace.names)
+        st = compute_stats(sl, 0, mode="cache")
+        if len(st.lifetimes_s):
+            out[op] = (float(st.lifetimes_s.mean()), st.write_freq_hz)
+    return out
+
+
+def fig5_retention():
+    rows = []
+    print("\n=== Fig 5: per-operation lifetimes vs GCRAM retention ===")
+    print(f"{'operation':14s} {'mean lt (us)':>12s} {'wf (MHz)':>9s} "
+          f"{'Si ret (us)':>11s} {'Hy ret (us)':>11s} {'placement':>22s}")
+    ops = per_op_lifetimes()
+    for op, (lt, wf) in sorted(ops.items(), key=lambda kv: kv[1][0]):
+        si = SI_GCRAM.retention_at(wf)
+        hy = HYBRID_GCRAM.retention_at(wf)
+        if lt <= si:
+            place = "Si-GCRAM refresh-free"
+        elif lt <= hy:
+            place = "Hybrid-GCRAM"
+        else:
+            place = "SRAM / refresh needed"
+        print(f"{op:14s} {lt * 1e6:12.3f} {wf / 1e6:9.2f} "
+              f"{si * 1e6:11.2f} {hy * 1e6:11.2f} {place:>22s}")
+        rows.append(f"fig5_retention.{op},0,"
+                    f"lt_us={lt * 1e6:.3f};placement={place}")
+    # paper's qualitative orderings
+    if "gemm" in ops and "normalization" in ops:
+        assert ops["gemm"][0] < ops["normalization"][0], \
+            "paper Fig 5: GEMM data must be shorter-lived than norms"
+    return rows

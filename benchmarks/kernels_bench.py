@@ -1,0 +1,86 @@
+"""Pallas kernel microbenchmarks.
+
+On CPU the kernels run in interpret mode (correctness), so us_per_call is
+the *oracle-relative* timing of the jnp reference path plus the analytic
+FLOP/byte counts the kernels achieve on the TPU target; this is what the
+perf loop reasons about structurally.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.flash_attention.ref import attention_reference
+from repro.kernels.lifetime_scan.ops import default_edges, lifetime_histogram
+from repro.kernels.ssd_scan.ref import ssd_chunked
+from repro.models.layers import blockwise_attention
+
+
+def _time(fn, *args, n=5):
+    fn(*args)  # compile
+    t0 = time.monotonic()
+    for _ in range(n):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.monotonic() - t0) / n * 1e6
+
+
+def kernels_bench():
+    rows = []
+    key = jax.random.PRNGKey(0)
+    print("\n=== Pallas kernel benches (jnp twin timing on CPU; "
+          "kernel validated vs oracle in tests) ===")
+
+    # flash attention twin (blockwise jnp) vs naive reference
+    B, H, KV, S, hd = 1, 8, 2, 1024, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, KV, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, KV, hd), jnp.float32)
+    f_block = jax.jit(lambda q, k, v: blockwise_attention(
+        q, k, v, causal=True))
+    us_b = _time(f_block, q, k, v)
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    f_naive = jax.jit(lambda q, k, v: attention_reference(
+        q, k, v, causal=True))
+    us_n = _time(f_naive, qt, kt, vt)
+    flops = 4 * B * H * S * S * hd
+    print(f"attention {S=}: blockwise {us_b:.0f}us naive {us_n:.0f}us "
+          f"({flops / 1e9:.2f} GF)")
+    rows.append(f"kernel.flash_attention,{us_b:.1f},"
+                f"naive_us={us_n:.1f};gflop={flops / 1e9:.2f}")
+
+    # SSD scan
+    b, l, h, p, n = 2, 2048, 8, 64, 64
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (b, l, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, l, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    Bm = jax.random.normal(ks[3], (b, l, n))
+    C = jax.random.normal(ks[4], (b, l, n))
+    f_ssd = jax.jit(lambda *a: ssd_chunked(*a, chunk=64))
+    us = _time(f_ssd, x, dt, A, Bm, C)
+    print(f"ssd_scan b{b} l{l} h{h}: {us:.0f}us")
+    rows.append(f"kernel.ssd_scan,{us:.1f},l={l};h={h}")
+
+    # lifetime scan pipeline throughput
+    rng = np.random.RandomState(0)
+    n_ev = 200_000
+    t = np.sort(rng.randint(0, 10 * n_ev, n_ev)).astype(np.int32)
+    a = rng.randint(0, 4096, n_ev).astype(np.int32)
+    w = (rng.rand(n_ev) < 0.35).astype(np.int32)
+    edges = default_edges(32, 1, 1e7)
+    t0 = time.monotonic()
+    hist, stats = lifetime_histogram(t, a, w, edges, block=1024)
+    jax.block_until_ready(hist)
+    us = (time.monotonic() - t0) * 1e6
+    print(f"lifetime_scan {n_ev} events: {us:.0f}us "
+          f"({n_ev / us:.1f} ev/us, interpret mode)")
+    rows.append(f"kernel.lifetime_scan,{us:.1f},events={n_ev}")
+    return rows

@@ -1,0 +1,46 @@
+"""Benchmark harness: one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV (plus human-readable tables).
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``.
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table4|table6|table7|table8|table9|fig8|fig10|"
+                         "kernels")
+    args = ap.parse_args()
+
+    from benchmarks import paper_tables as pt
+    from benchmarks.fig5_retention import fig5_retention
+    from benchmarks.kernels_bench import kernels_bench
+
+    benches = {
+        "table4": pt.table4_pka,
+        "fig5": fig5_retention,
+        "table6": pt.table6_energy,
+        "table7": pt.table7_hetero,
+        "table8": pt.table8_orphans,
+        "table9": pt.table9_pe_size,
+        "fig8": pt.fig8_lifetimes,
+        "fig10": pt.fig10_dataflow,
+        "kernels": kernels_bench,
+    }
+    rows = []
+    for name, fn in benches.items():
+        if args.only and name != args.only:
+            continue
+        rows.extend(fn())
+
+    print("\n=== CSV (name,us_per_call,derived) ===")
+    for r in rows:
+        print(r)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,113 @@
+"""Visualization of GainSight results (paper §6.4, Figs 5/8/10 style).
+
+Static matplotlib rendition of the paper's interactive dashboard:
+  - lifetime histograms per subpartition with Si-/Hybrid-GCRAM retention
+    lines (Fig 8 left / Fig 10),
+  - area-vs-energy scatter per device per workload (Fig 8 right).
+
+  PYTHONPATH=src python -m benchmarks.visualize --out reports/
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import matplotlib
+matplotlib.use("Agg")
+import matplotlib.pyplot as plt  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.backends.systolic import SystolicConfig, simulate  # noqa: E402
+from repro.core import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM,  # noqa
+                        compute_stats, device_report, lifetimes_of_trace)
+
+
+def lifetime_histograms(out_dir: str):
+    from benchmarks.paper_tables import RESNET50_GEMMS
+    from benchmarks.workloads import gpu_trace
+
+    fig, axes = plt.subplots(2, 3, figsize=(15, 7))
+    # GPU L1/L2 for two workloads
+    for col, name in enumerate(("bert-base-uncased", "resnet-50")):
+        trace, _ = gpu_trace(name)
+        for row, sub in enumerate((0, 1)):
+            ax = axes[row][col]
+            st = compute_stats(trace, sub, mode="cache")
+            lt = st.lifetimes_s[st.lifetimes_s > 0]
+            if len(lt):
+                ax.hist(np.log10(lt), bins=40, color="#4878a8")
+            for dev, c in ((SI_GCRAM, "tab:red"),
+                           (HYBRID_GCRAM, "tab:orange")):
+                ax.axvline(np.log10(dev.retention_s), color=c, ls="--",
+                           label=dev.name)
+            ax.set_title(f"{name} {'L1' if sub == 0 else 'L2'}")
+            ax.set_xlabel("log10 lifetime (s)")
+            ax.legend(fontsize=7)
+    # systolic Fig-10 panel
+    for row, df in enumerate(("ws", "os")):
+        trace, _ = simulate(RESNET50_GEMMS,
+                            SystolicConfig(rows=256, cols=256,
+                                           dataflow=df))
+        ax = axes[row][2]
+        for sub, nm, c in ((0, "ifmap", "#4878a8"), (1, "filter", "#6aa84f"),
+                           (2, "ofmap", "#a85c48")):
+            st = compute_stats(trace, sub, mode="scratchpad")
+            lt = st.lifetimes_s[st.lifetimes_s > 0]
+            if len(lt):
+                ax.hist(np.log10(lt), bins=40, alpha=0.55, label=nm,
+                        color=c)
+        ax.axvline(np.log10(SI_GCRAM.retention_s), color="tab:red",
+                   ls="--")
+        ax.set_title(f"systolic 256x256 resnet-50 ({df})")
+        ax.set_xlabel("log10 lifetime (s)")
+        ax.legend(fontsize=7)
+    fig.tight_layout()
+    path = os.path.join(out_dir, "fig8_fig10_lifetimes.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return path
+
+
+def area_energy_scatter(out_dir: str):
+    from benchmarks.paper_tables import GPU_WORKLOADS
+    from benchmarks.workloads import gpu_trace
+
+    fig, axes = plt.subplots(1, 2, figsize=(11, 4.5))
+    markers = "osd^vP*X"
+    for sub, ax in ((0, axes[0]), (1, axes[1])):
+        for wi, name in enumerate(GPU_WORKLOADS[:6]):
+            trace, _ = gpu_trace(name)
+            st = compute_stats(trace, sub, mode="cache")
+            for dev, c in zip(DEFAULT_DEVICES,
+                              ("tab:blue", "tab:red", "tab:orange")):
+                r = device_report(st, dev)
+                ax.scatter(r.area_mm2, r.active_energy_j, color=c,
+                           marker=markers[wi % len(markers)], s=40,
+                           label=dev.name if wi == 0 else None)
+        ax.set_xlabel("area (mm^2)")
+        ax.set_ylabel("active energy (J)")
+        ax.set_xscale("log")
+        ax.set_yscale("log")
+        ax.set_title(f"{'L1' if sub == 0 else 'L2'} cache")
+        ax.legend(fontsize=8)
+    fig.tight_layout()
+    path = os.path.join(out_dir, "fig8_area_energy.png")
+    fig.savefig(path, dpi=120)
+    plt.close(fig)
+    return path
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="reports")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    p1 = lifetime_histograms(args.out)
+    p2 = area_energy_scatter(args.out)
+    print("wrote", p1)
+    print("wrote", p2)
+
+
+if __name__ == "__main__":
+    main()

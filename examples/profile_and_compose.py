@@ -1,0 +1,29 @@
+"""Profile-guided memory composition across backends (the paper's §3.1
+usage scenario, driven by the framework's own model configs).
+
+Profiles tinyllama's op stream through the GPU-like L1/L2 hierarchy under
+both write-allocation policies, then the TPU jaxpr backend, and prints the
+heterogeneous composition each would want.
+
+  PYTHONPATH=src python examples/profile_and_compose.py
+"""
+
+from repro.launch.profile import main
+
+print("=" * 70)
+print("GPU-cache backend (write-allocate):")
+print("=" * 70)
+main(["--arch", "tinyllama_1_1b", "--backend", "gpu", "--seq", "96"])
+
+print()
+print("=" * 70)
+print("Systolic-array backend (output-stationary, 128x128):")
+print("=" * 70)
+main(["--arch", "tinyllama_1_1b", "--backend", "systolic",
+      "--dataflow", "os", "--pe", "128", "--seq", "96"])
+
+print()
+print("=" * 70)
+print("TPU jaxpr backend (the framework profiling its own train step):")
+print("=" * 70)
+main(["--arch", "tinyllama_1_1b", "--backend", "tpu", "--seq", "64"])

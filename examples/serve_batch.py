@@ -1,0 +1,13 @@
+"""Batched serving example: prefill a batch of prompts and decode with the
+KV cache (greedy), reporting tokens/s.
+
+  PYTHONPATH=src python examples/serve_batch.py
+"""
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    gen = main(["--arch", "tinyllama_1_1b", "--smoke",
+                "--batch", "4", "--prompt-len", "32", "--gen", "16"])
+    assert gen.shape == (4, 16)
+    print("OK: generated", gen.shape)

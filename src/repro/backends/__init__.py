@@ -1,0 +1,13 @@
+"""Retargetable hardware backends (paper §5).
+
+Each backend executes (or models the execution of) a workload on a target
+architecture and emits the canonical trace format of ``repro.core.trace``:
+
+  systolic   - SCALE-Sim-style systolic array with is/ws/os dataflows (§5.2)
+  cachesim   - set-associative L1/L2 data caches, write-allocate ablation (§5.1)
+  opstream   - operator-level address-stream generation from model op graphs
+               (replaces SASS capture; see DESIGN.md §3)
+  tpu_graph  - TPU backend: HBM<->VMEM buffer traces from jaxprs of the
+               framework's own compiled model steps ("bring your own
+               hardware backend", §5.3)
+"""

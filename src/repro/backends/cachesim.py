@@ -1,0 +1,156 @@
+"""Set-associative L1/L2 data-cache simulator (paper §5.1).
+
+Replaces the Accel-Sim GPU backend: address streams (from
+``repro.backends.opstream`` or any other source) are replayed through a
+two-level write-back cache hierarchy modeled after an H100 SM slice:
+configurable size / associativity / line size, LRU replacement, and the
+write-allocation policy ablation of §5.1.2 / §7.1.6.
+
+The simulator is a jitted ``jax.lax.scan`` over the access stream - the
+cycle-accurate "backend" runs compiled on the accelerator rather than as a
+Python interpreter loop (DESIGN.md §3).
+
+L2 stream composition (write-back hierarchy):
+  - L1 read misses and (under write-allocate) L1 write misses fetch the
+    line from L2  -> L2 *read* access;
+  - dirty L1 evictions write back           -> L2 *write* access;
+  - under no-write-allocate, L1 write misses bypass to L2 -> L2 *write*.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trace import Trace
+
+L1, L2 = 0, 1
+SUB_NAMES = ("L1", "L2")
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    size_kb: int = 128
+    ways: int = 8
+    line_bytes: int = 128
+
+    @property
+    def n_sets(self) -> int:
+        return max(1, (self.size_kb * 1024) // (self.line_bytes * self.ways))
+
+
+@dataclasses.dataclass(frozen=True)
+class HierarchyConfig:
+    l1: CacheConfig = CacheConfig(size_kb=128, ways=8)
+    l2: CacheConfig = CacheConfig(size_kb=4096, ways=16)
+    write_allocate: bool = True
+    clock_hz: float = 1.0e9
+    l2_latency: int = 30  # cycles added to L2 access stamps
+
+
+@partial(jax.jit, static_argnames=("n_sets", "ways", "write_allocate"))
+def _simulate_cache(line_addr, is_write, n_sets, ways, write_allocate):
+    """Scan one cache level. Returns (hit, fill, evict_addr, evict_dirty).
+
+    fill:        line was allocated (miss that fetched from next level)
+    evict_addr:  address of a line evicted by the fill (-1 if none/invalid)
+    evict_dirty: evicted line was dirty (needs write-back)
+    """
+    n = line_addr.shape[0]
+    tags0 = jnp.full((n_sets, ways), -1, jnp.int32)
+    dirty0 = jnp.zeros((n_sets, ways), bool)
+    stamp0 = jnp.zeros((n_sets, ways), jnp.int32)
+
+    def step(state, inp):
+        tags, dirty, stamp, clock = state
+        addr, w = inp
+        s = (addr % n_sets).astype(jnp.int32)
+        row = tags[s]
+        match = row == addr
+        hit = match.any()
+        way_hit = jnp.argmax(match)
+
+        allocate = (~hit) & (write_allocate | (~w))
+        victim = jnp.argmin(stamp[s])
+        evict_addr = jnp.where(allocate, tags[s, victim], -1)
+        evict_dirty = jnp.where(allocate, dirty[s, victim], False)
+
+        way = jnp.where(hit, way_hit, victim)
+        touched = hit | allocate
+        new_tag = jnp.where(allocate, addr, tags[s, way])
+        new_dirty = jnp.where(
+            touched, jnp.where(w, True, dirty[s, way] & hit), dirty[s, way])
+        tags = tags.at[s, way].set(jnp.where(touched, new_tag, tags[s, way]))
+        dirty = dirty.at[s, way].set(new_dirty)
+        stamp = stamp.at[s, way].set(
+            jnp.where(touched, clock, stamp[s, way]))
+
+        out = (hit, allocate, evict_addr, evict_dirty & (evict_addr >= 0))
+        return (tags, dirty, stamp, clock + 1), out
+
+    (_, _, _, _), outs = jax.lax.scan(
+        step, (tags0, dirty0, stamp0, jnp.int32(1)),
+        (line_addr.astype(jnp.int32), is_write.astype(bool)))
+    return outs
+
+
+def simulate_hierarchy(
+    time_cycles: np.ndarray,
+    byte_addr: np.ndarray,
+    is_write: np.ndarray,
+    cfg: HierarchyConfig = HierarchyConfig(),
+) -> Trace:
+    """Replay a byte-address stream through L1 -> L2; emit a two-subpartition
+    trace in the canonical format (line-granular addresses)."""
+    t = np.asarray(time_cycles, np.int64)
+    lines = (np.asarray(byte_addr, np.int64) // cfg.l1.line_bytes)
+    w = np.asarray(is_write, bool)
+
+    hit1, fill1, ev_addr, ev_dirty = (
+        np.asarray(x) for x in _simulate_cache(
+            jnp.asarray(lines), jnp.asarray(w),
+            cfg.l1.n_sets, cfg.l1.ways, cfg.write_allocate))
+
+    # --- compose the L2 access stream, preserving time order -------------
+    l2_t, l2_a, l2_w = [], [], []
+    # fills: L1 fetched the line from L2 (read)
+    l2_t.append(t[fill1] + cfg.l2_latency)
+    l2_a.append(lines[fill1])
+    l2_w.append(np.zeros(int(fill1.sum()), bool))
+    # dirty evictions: write-back to L2
+    m = ev_dirty & (ev_addr >= 0)
+    l2_t.append(t[m] + cfg.l2_latency)
+    l2_a.append(ev_addr[m].astype(np.int64))
+    l2_w.append(np.ones(int(m.sum()), bool))
+    # no-write-allocate: write misses bypass to L2
+    if not cfg.write_allocate:
+        m = w & ~hit1
+        l2_t.append(t[m] + cfg.l2_latency)
+        l2_a.append(lines[m])
+        l2_w.append(np.ones(int(m.sum()), bool))
+    l2_t = np.concatenate(l2_t)
+    l2_a = np.concatenate(l2_a)
+    l2_w = np.concatenate(l2_w)
+    order = np.argsort(l2_t, kind="stable")
+    l2_t, l2_a, l2_w = l2_t[order], l2_a[order], l2_w[order]
+
+    hit2 = np.asarray(_simulate_cache(
+        jnp.asarray(l2_a), jnp.asarray(l2_w),
+        cfg.l2.n_sets, cfg.l2.ways, cfg.write_allocate)[0])
+
+    times = np.concatenate([t, l2_t])
+    addrs = np.concatenate([lines, l2_a])
+    writes = np.concatenate([w, l2_w])
+    hits = np.concatenate([hit1, hit2])
+    subs = np.concatenate([np.zeros(len(t), np.int32),
+                           np.ones(len(l2_t), np.int32)])
+    order = np.argsort(times, kind="stable")
+    return Trace(
+        time_cycles=times[order], addr=addrs[order], is_write=writes[order],
+        hit=hits[order], subpartition=subs[order],
+        clock_hz=cfg.clock_hz, block_bits=cfg.l1.line_bytes * 8,
+        names=SUB_NAMES)

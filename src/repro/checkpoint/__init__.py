@@ -1,0 +1,5 @@
+"""Sharded checkpointing: atomic save/restore + elastic re-sharding."""
+
+from repro.checkpoint.manager import CheckpointManager
+
+__all__ = ["CheckpointManager"]

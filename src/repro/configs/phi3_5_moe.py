@@ -1,0 +1,17 @@
+"""phi3.5-moe-42b-a6.6b [moe] - 16 experts top-2
+[hf:microsoft/Phi-3.5-MoE-instruct; hf]."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name="phi3.5-moe-42b-a6.6b", family="moe",
+    n_layers=32, d_model=4096, n_heads=32, kv_heads=8,
+    d_ff=6400, vocab=32064,
+    moe_experts=16, moe_topk=2, moe_d_ff=6400,
+)
+
+SMOKE = ArchConfig(
+    name="phi3.5-moe-smoke", family="moe",
+    n_layers=2, d_model=64, n_heads=4, kv_heads=2,
+    d_ff=128, vocab=256,
+    moe_experts=4, moe_topk=2, moe_d_ff=128, loss_chunk=64,
+)

@@ -1,0 +1,185 @@
+"""Data-lifetime extraction (paper §4, Definitions 4.1-4.3).
+
+A *lifetime* of a value at an address is the interval between its first
+write (store / fetch / cache miss, depending on the memory kind) and the
+last read of that value before it is overwritten or invalidated.
+
+The extraction is a segmented reduction over the event stream sorted by
+(address, time): a new segment ("lifetime") begins whenever the address
+changes or a *boundary* event occurs.  Boundary rules per Definition:
+
+  Def 4.1/4.2 (scratchpad):  boundary = is_write
+  Def 4.3    (data cache):   boundary = is_write | miss
+      under no-allocate-on-write, write misses do not allocate: the write
+      terminates the previous lifetime but does not begin a new one, so a
+      segment started by a write-miss is dropped.
+
+Implemented as pure-jnp segment ops so it jits and shards; a Pallas TPU
+kernel covering the same computation lives in ``repro.kernels.lifetime_scan``
+(this module is its oracle for the sorted-segment phase).
+
+Outputs are *per-segment* arrays padded to ``n_events`` (a trace of N events
+has at most N lifetimes):
+  lifetime_cycles  i32   last-read - first-write (0 for orphans)
+  n_reads          i32   reads observed within the lifetime
+  start_cycles     i32   cycle stamp of the initiating event
+  addr             i32   block address hosting the lifetime
+  valid            bool  segment exists (non-padding)
+  orphan           bool  lifetime with zero reads (fetched/written, never
+                         reused) - paper §7.1.6 "orphaned accesses"
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.trace import Trace
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class LifetimeStats:
+    lifetime_cycles: jnp.ndarray
+    n_reads: jnp.ndarray
+    start_cycles: jnp.ndarray
+    addr: jnp.ndarray
+    valid: jnp.ndarray
+    orphan: jnp.ndarray
+    seg_id_per_event: jnp.ndarray  # maps events -> their lifetime segment
+
+    def lifetimes_s(self, clock_hz: float) -> np.ndarray:
+        """Valid lifetimes in seconds (host-side convenience)."""
+        lt = np.asarray(self.lifetime_cycles)
+        v = np.asarray(self.valid)
+        return lt[v] / clock_hz
+
+
+@partial(jax.jit, static_argnames=("mode", "write_allocate"))
+def extract_lifetimes(
+    time_cycles: jnp.ndarray,
+    addr: jnp.ndarray,
+    is_write: jnp.ndarray,
+    hit: jnp.ndarray,
+    mode: str = "scratchpad",
+    write_allocate: bool = True,
+) -> LifetimeStats:
+    """Segmented lifetime extraction. All inputs are 1-D, equal length.
+
+    mode: "scratchpad" (Def 4.2) or "cache" (Def 4.3).
+    write_allocate: cache write-allocation policy ablation (§7.1.6).
+    """
+    n = time_cycles.shape[0]
+    t = time_cycles.astype(jnp.int32)  # exact cycle arithmetic
+    a = addr.astype(jnp.int32)
+    w = is_write.astype(bool)
+    h = hit.astype(bool)
+
+    # Sort events by (addr, time); stable so same-cycle order is preserved.
+    order = jnp.lexsort((t, a))
+    t, a, w, h = t[order], a[order], w[order], h[order]
+
+    new_addr = jnp.concatenate(
+        [jnp.ones((1,), bool), a[1:] != a[:-1]]) if n > 0 else jnp.zeros((0,), bool)
+    if mode == "scratchpad":
+        boundary = new_addr | w
+        read_ok = ~w
+        dead_start = jnp.zeros_like(w)  # every segment is a real lifetime
+    elif mode == "cache":
+        miss = ~h
+        boundary = new_addr | w | miss
+        # a read only extends a lifetime if it hits in the cache
+        read_ok = (~w) & h
+        if write_allocate:
+            dead_start = jnp.zeros_like(w)
+        else:
+            # write misses do not allocate a line: segments they start are
+            # not lifetimes in the cache (the data never lived on-chip).
+            dead_start = w & miss
+    else:
+        raise ValueError(f"unknown mode {mode!r}")
+
+    seg_id = jnp.cumsum(boundary.astype(jnp.int32)) - 1
+    seg_id = jnp.maximum(seg_id, 0)
+
+    neg = jnp.int32(-(2**31) + 1)
+    start = jax.ops.segment_min(t, seg_id, num_segments=n)
+    last_read = jax.ops.segment_max(
+        jnp.where(read_ok, t, neg), seg_id, num_segments=n)
+    n_reads = jax.ops.segment_sum(
+        read_ok.astype(jnp.int32), seg_id, num_segments=n)
+    n_events_seg = jax.ops.segment_sum(
+        jnp.ones_like(seg_id), seg_id, num_segments=n)
+    seg_addr = jax.ops.segment_max(a, seg_id, num_segments=n)
+    seg_dead = jax.ops.segment_max(
+        dead_start.astype(jnp.int32) * boundary.astype(jnp.int32),
+        seg_id, num_segments=n).astype(bool)
+
+    valid = (n_events_seg > 0) & (~seg_dead)
+    has_read = n_reads > 0
+    lifetime = jnp.where(valid & has_read, last_read - start, 0)
+    orphan = valid & (~has_read)
+
+    return LifetimeStats(
+        lifetime_cycles=lifetime,
+        n_reads=n_reads,
+        start_cycles=jnp.where(valid, start, 0),
+        addr=jnp.where(valid, seg_addr, -1),
+        valid=valid,
+        orphan=orphan,
+        seg_id_per_event=seg_id,
+    )
+
+
+def lifetimes_of_trace(
+    trace: Trace,
+    mode: str = "scratchpad",
+    write_allocate: bool = True,
+) -> LifetimeStats:
+    return extract_lifetimes(
+        jnp.asarray(np.asarray(trace.time_cycles), jnp.int32),
+        jnp.asarray(np.asarray(trace.addr)),
+        jnp.asarray(np.asarray(trace.is_write)),
+        jnp.asarray(np.asarray(trace.hit)),
+        mode=mode,
+        write_allocate=write_allocate,
+    )
+
+
+def short_lived_fraction(
+    stats: LifetimeStats, clock_hz: float, retention_s: float,
+    weight_by_accesses: bool = True,
+) -> float:
+    """Fraction of accesses (or lifetimes) at or under a device retention.
+
+    The paper's headline numbers ("64% of L1 accesses are short-lived")
+    weight by *accesses*: every event belonging to a lifetime that fits the
+    retention counts.
+    """
+    lt_s = np.asarray(stats.lifetime_cycles) / clock_hz
+    valid = np.asarray(stats.valid)
+    fits = (lt_s <= retention_s) & valid
+    if weight_by_accesses:
+        seg_events = np.asarray(
+            jax.ops.segment_sum(
+                jnp.ones_like(stats.seg_id_per_event),
+                stats.seg_id_per_event,
+                num_segments=stats.lifetime_cycles.shape[0]))
+        tot = seg_events[valid].sum()
+        return float(seg_events[fits].sum() / max(tot, 1))
+    nv = valid.sum()
+    return float(fits.sum() / max(nv, 1))
+
+
+def lifetime_histogram(
+    stats: LifetimeStats, clock_hz: float,
+    bins_s: np.ndarray,
+) -> np.ndarray:
+    """Histogram of valid lifetimes (seconds) over given bin edges."""
+    lt = stats.lifetimes_s(clock_hz)
+    hist, _ = np.histogram(lt, bins=np.asarray(bins_s))
+    return hist

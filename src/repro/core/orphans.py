@@ -1,0 +1,50 @@
+"""Orphaned-access / cache-pollution analysis (paper §7.1.6, Table 8).
+
+An access is *orphaned* when it belongs to a lifetime with zero reuse: the
+datum was fetched or written to the cache, then evicted/overwritten without
+ever being read.  Orphaned accesses pollute the cache and waste refresh and
+allocation energy on short-term memories.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.lifetime import LifetimeStats, lifetimes_of_trace
+from repro.core.trace import Trace
+
+
+def orphaned_access_fraction(
+    trace: Trace,
+    sub: int,
+    mode: str = "cache",
+    write_allocate: bool = True,
+) -> float:
+    """Fraction of accesses that belong to zero-reuse lifetimes."""
+    t = trace.select(sub)
+    if t.n_events == 0:
+        return 0.0
+    stats: LifetimeStats = lifetimes_of_trace(
+        t, mode=mode, write_allocate=write_allocate)
+    n = stats.lifetime_cycles.shape[0]
+    seg_events = np.asarray(jax.ops.segment_sum(
+        jnp.ones_like(stats.seg_id_per_event),
+        stats.seg_id_per_event, num_segments=n))
+    valid = np.asarray(stats.valid)
+    orphan = np.asarray(stats.orphan)
+    total = seg_events[valid].sum()
+    if total == 0:
+        return 0.0
+    return float(seg_events[valid & orphan].sum() / total)
+
+
+def policy_ablation(trace: Trace, sub: int) -> dict:
+    """Write-allocate vs no-write-allocate orphan comparison (Table 8)."""
+    return {
+        "write_allocate": orphaned_access_fraction(
+            trace, sub, write_allocate=True),
+        "no_write_allocate": orphaned_access_fraction(
+            trace, sub, write_allocate=False),
+    }

@@ -1,0 +1,108 @@
+"""Canonical memory-access trace schema shared by every hardware backend.
+
+A trace is a flat, struct-of-arrays record of memory accesses to one or more
+on-chip memory *subpartitions* (paper §5.3): GPU L1/L2 caches, systolic-array
+ifmap/filter/ofmap scratchpads, or TPU VMEM. Backends emit this format; the
+analytical frontend consumes it without knowing which backend produced it.
+
+Fields (all 1-D arrays of equal length ``n_events``):
+  time_cycles   int32   cycle stamp of the access (monotone per subpartition)
+  addr          int32   block-granular address (cache line / scratchpad word)
+  is_write      bool    store (True) vs load (False)
+  hit           bool    cache hit status; always True for scratchpads
+  subpartition  int32   which memory the access targets (index into names)
+
+Scalar metadata:
+  clock_hz      float   clock used to convert cycles -> seconds
+  block_bits    int     bits per addressable block (e.g. 128 B line = 1024)
+  names         tuple   subpartition names, e.g. ("L1", "L2")
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Trace:
+    time_cycles: np.ndarray
+    addr: np.ndarray
+    is_write: np.ndarray
+    hit: np.ndarray
+    subpartition: np.ndarray
+    clock_hz: float = 1.0e9
+    block_bits: int = 1024  # 128-byte line
+    names: tuple = ("mem",)
+
+    def __post_init__(self):
+        n = len(self.time_cycles)
+        for f in ("addr", "is_write", "hit", "subpartition"):
+            if len(getattr(self, f)) != n:
+                raise ValueError(f"trace field {f} length mismatch")
+
+    @property
+    def n_events(self) -> int:
+        return int(len(self.time_cycles))
+
+    @property
+    def duration_s(self) -> float:
+        if self.n_events == 0:
+            return 0.0
+        t = np.asarray(self.time_cycles)
+        return float(t.max() - t.min() + 1) / self.clock_hz
+
+    def select(self, sub: int) -> "Trace":
+        """Restrict the trace to a single subpartition."""
+        m = np.asarray(self.subpartition) == sub
+        return Trace(
+            time_cycles=np.asarray(self.time_cycles)[m],
+            addr=np.asarray(self.addr)[m],
+            is_write=np.asarray(self.is_write)[m],
+            hit=np.asarray(self.hit)[m],
+            subpartition=np.asarray(self.subpartition)[m],
+            clock_hz=self.clock_hz,
+            block_bits=self.block_bits,
+            names=self.names,
+        )
+
+    def counts(self):
+        w = np.asarray(self.is_write)
+        return int((~w).sum()), int(w.sum())  # (reads, writes)
+
+
+def make_trace(
+    time_cycles: Sequence[int],
+    addr: Sequence[int],
+    is_write: Sequence[bool],
+    hit: Sequence[bool] | None = None,
+    subpartition: Sequence[int] | None = None,
+    clock_hz: float = 1.0e9,
+    block_bits: int = 1024,
+    names: tuple = ("mem",),
+) -> Trace:
+    t = np.asarray(time_cycles, dtype=np.int64)
+    a = np.asarray(addr, dtype=np.int64)
+    w = np.asarray(is_write, dtype=bool)
+    h = np.ones_like(w) if hit is None else np.asarray(hit, dtype=bool)
+    s = np.zeros(len(t), np.int32) if subpartition is None else np.asarray(
+        subpartition, dtype=np.int32)
+    return Trace(t, a, w, h, s, clock_hz, block_bits, names)
+
+
+def concat_traces(traces: Sequence[Trace]) -> Trace:
+    """Concatenate traces that share metadata (e.g. per-kernel streams)."""
+    base = traces[0]
+    return Trace(
+        time_cycles=np.concatenate([np.asarray(t.time_cycles) for t in traces]),
+        addr=np.concatenate([np.asarray(t.addr) for t in traces]),
+        is_write=np.concatenate([np.asarray(t.is_write) for t in traces]),
+        hit=np.concatenate([np.asarray(t.hit) for t in traces]),
+        subpartition=np.concatenate(
+            [np.asarray(t.subpartition) for t in traces]),
+        clock_hz=base.clock_hz,
+        block_bits=base.block_bits,
+        names=base.names,
+    )

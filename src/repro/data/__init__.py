@@ -1,0 +1,5 @@
+"""Deterministic synthetic data pipeline (sharded, restart-reproducible)."""
+
+from repro.data.pipeline import SyntheticLMDataset, shard_batch
+
+__all__ = ["SyntheticLMDataset", "shard_batch"]

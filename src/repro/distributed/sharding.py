@@ -1,0 +1,147 @@
+"""Sharding rules: DP/FSDP/TP/EP/SP over the production mesh.
+
+Models annotate parameters and activations with *logical* axis sentinels;
+the launcher resolves them onto physical mesh axes:
+
+  BATCH  -> ("pod", "data") on the multi-pod mesh, ("data",) single-pod
+  FSDP   -> "data"   (parameter sharding over the data axis)
+  MODEL  -> "model"  (tensor/expert parallelism)
+  SEQ    -> "data"   (sequence parallelism for long-context decode)
+
+Resolution is process-global (set once by the launcher before tracing);
+when no mesh is configured every annotation is a no-op so tests and
+single-device runs are untouched.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+BATCH = "BATCH"
+FSDP = "FSDP"
+MODEL = "MODEL"
+SEQ = "SEQ"
+
+_STATE: dict = {"mesh": None, "multi_pod": False, "fsdp": True}
+
+
+def set_mesh(mesh: Optional[Mesh], multi_pod: bool = False,
+             fsdp: bool = True) -> None:
+    _STATE["mesh"] = mesh
+    _STATE["multi_pod"] = multi_pod
+    _STATE["fsdp"] = fsdp
+
+
+def get_mesh() -> Optional[Mesh]:
+    return _STATE["mesh"]
+
+
+def resolve(template) -> P:
+    """Map a logical spec template (tuple of sentinels/None) to a
+    PartitionSpec on the configured mesh."""
+    multi_pod = _STATE["multi_pod"]
+    out = []
+    for t in template:
+        if t is None:
+            out.append(None)
+        elif t == BATCH:
+            out.append(("pod", "data") if multi_pod else "data")
+        elif t == FSDP:
+            out.append("data" if _STATE["fsdp"] else None)
+        elif t == MODEL:
+            out.append("model")
+        elif t == SEQ:
+            out.append("data")
+        elif isinstance(t, tuple):  # compound, e.g. (BATCH, MODEL)
+            sub = []
+            for u in t:
+                r = resolve((u,))[0]
+                if r is None:
+                    continue
+                sub.extend(r if isinstance(r, tuple) else (r,))
+            out.append(tuple(sub) if sub else None)
+        else:
+            out.append(t)
+    return P(*out)
+
+
+def named_sharding(template) -> Optional[NamedSharding]:
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, resolve(template))
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, tuple):
+        out = 1
+        for e in entry:
+            out *= mesh.shape[e]
+        return out
+    return mesh.shape[entry]
+
+
+def constrain(x, template):
+    """with_sharding_constraint on a logical template (no-op without mesh).
+
+    Divisibility-aware: axes whose dimension doesn't divide by the mesh
+    extent are replicated instead (e.g. kv_heads=4 on a 16-way model axis)
+    - avoids GSPMD involuntary full rematerialization.
+    """
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return x
+    spec = resolve(template)
+    fixed = []
+    for i, entry in enumerate(spec):
+        if entry is not None and x.shape[i] % _axis_size(mesh, entry) != 0:
+            entry = None
+        fixed.append(entry)
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, P(*fixed)))
+
+
+def tree_shardings(spec_tree: Any):
+    """Resolve a tree of templates into NamedShardings (or None tree)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return None
+    return jax.tree.map(
+        lambda t: NamedSharding(mesh, resolve(t)),
+        spec_tree,
+        is_leaf=lambda t: isinstance(t, tuple))
+
+
+def tree_shardings_for(shapes_tree, spec_tree):
+    """Like tree_shardings, but drops axes that don't divide the concrete
+    leaf dimensions (shapes_tree mirrors spec_tree; leaves have .shape)."""
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return None
+
+    def one(shape_leaf, tpl):
+        spec = resolve(tpl)
+        fixed = []
+        for i, entry in enumerate(spec):
+            if entry is not None and \
+                    shape_leaf.shape[i] % _axis_size(mesh, entry) != 0:
+                entry = None
+            fixed.append(entry)
+        return NamedSharding(mesh, P(*fixed))
+
+    return jax.tree.map(one, shapes_tree, spec_tree,
+                        is_leaf=lambda t: isinstance(t, tuple) and all(
+                            x is None or isinstance(x, (str, tuple))
+                            for x in t))
+
+
+def replicated():
+    mesh = _STATE["mesh"]
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P())

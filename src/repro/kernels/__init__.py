@@ -1,0 +1,17 @@
+"""Pallas TPU kernels for the framework's compute hot spots.
+
+Each kernel directory contains:
+  kernel.py - pl.pallas_call with explicit BlockSpec VMEM tiling
+  ops.py    - jit'd public wrapper (auto-interpret off-TPU)
+  ref.py    - pure-jnp oracle used by the allclose test sweeps
+
+  flash_attention - blockwise online-softmax attention (GQA, causal);
+                    sequential kv-grid with VMEM (m, l, acc) carry;
+                    differentiable: FA-2 two-pass backward kernels
+                    (kernel_bwd.py) wired through a custom VJP
+  ssd_scan        - Mamba-2 SSD chunked scan; inter-chunk SSM state lives
+                    in VMEM scratch across the sequential chunk grid
+  lifetime_scan   - GainSight's frontend hot loop: segmented lifetime
+                    extraction + histogram over sorted event streams
+                    (the paper's own analysis made TPU-native)
+"""

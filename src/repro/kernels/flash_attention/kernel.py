@@ -1,0 +1,131 @@
+"""Pallas TPU flash-attention kernel (blockwise online-softmax, GQA).
+
+Grid: (batch*heads, q_blocks, kv_blocks); the last axis iterates
+sequentially on TPU, so the online-softmax running state (m, l, acc) lives
+in VMEM scratch and carries across kv blocks.  BlockSpecs tile Q/K/V into
+VMEM with MXU-aligned shapes (block sizes are multiples of 128 in
+production; tests sweep smaller shapes in interpret mode).
+
+GQA is handled in the K/V index maps: query head h reads kv head
+h // (H // KV) - no materialized head repetition.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_scr, l_scr,
+               acc_scr, *, scale, causal, q_block, kv_block, n_kv,
+               seq_kv):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale        # [bq, hd]
+    k = k_ref[0].astype(jnp.float32)                # [bk, hd]
+    v = v_ref[0].astype(jnp.float32)
+    # zero padded kv rows: 0 * garbage (possibly NaN) would poison the
+    # p @ v accumulation even though p == 0 there.
+    kv_valid = (ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (kv_block, 1), 0)) < seq_kv
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [bq, bk]
+
+    kv_pos = ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    mask = kv_pos < seq_kv
+    if causal:
+        q_pos = qi * q_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 0)
+        mask = mask & (q_pos >= kv_pos)
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_scr[...] = l_scr[...] * corr + p.sum(axis=1)
+    acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_scr[...] = m_new
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        l = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+        lse_ref[0] = m_scr[...] + jnp.log(l)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_block", "kv_block", "interpret"))
+def flash_attention_bhsd(q, k, v, *, causal=True, q_block=128,
+                         kv_block=128, interpret=False):
+    """q: [B, H, Sq, hd]; k/v: [B, KV, Skv, hd]; H % KV == 0.
+
+    Returns [B, H, Sq, hd].
+    """
+    B, H, Sq, hd = q.shape
+    _, KV, Skv, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    nq = pl.cdiv(Sq, q_block)
+    nk = pl.cdiv(Skv, kv_block)
+
+    qf = q.reshape(B * H, Sq, hd)
+    kf = k.reshape(B * KV, Skv, hd)
+    vf = v.reshape(B * KV, Skv, hd)
+
+    def kv_head(bh):
+        return (bh // H) * KV + (bh % H) // G
+
+    grid = (B * H, nq, nk)
+    out = pl.pallas_call(
+        functools.partial(
+            _fa_kernel, scale=scale, causal=causal, q_block=q_block,
+            kv_block=kv_block, n_kv=nk, seq_kv=Skv),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, kv_block, hd),
+                         lambda bh, qi, ki: (kv_head(bh), ki, 0)),
+            pl.BlockSpec((1, kv_block, hd),
+                         lambda bh, qi, ki: (kv_head(bh), ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, q_block, hd), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, q_block), lambda bh, qi, ki: (bh, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+            jax.ShapeDtypeStruct((B * H, Sq), jnp.float32),
+        ],
+        scratch_shapes=[
+            # (m, l, acc) running online-softmax state in VMEM
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block,), jnp.float32),
+            pltpu.VMEM((q_block, hd), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qf, kf, vf)
+    out, lse = out
+    return out.reshape(B, H, Sq, hd), lse.reshape(B, H, Sq)

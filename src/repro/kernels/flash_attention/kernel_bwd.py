@@ -1,0 +1,208 @@
+"""Pallas TPU flash-attention backward kernels (FA-2 two-pass scheme).
+
+Pass A (dq): grid (B*H, nq, nk) - kv innermost, dq accumulates in VMEM
+scratch across kv blocks and is written once at the last kv step.
+
+Pass B (dk/dv): grid (B*H, nk, nq) - q innermost, dk/dv accumulate in
+VMEM scratch across q blocks.  Outputs are per *query* head; the GQA
+group-sum reduction to kv heads happens in ops.py.
+
+Both passes recompute p = exp(s - lse) from the forward's logsumexp, so
+no S^2 probabilities are ever stored in HBM - the property the §Perf
+analysis identified as the dominant HBM term of XLA-lowered attention.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mask(s, qi, ki, q_block, kv_block, seq_kv, causal):
+    kv_pos = ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, kv_block), 1)
+    m = kv_pos < seq_kv
+    if causal:
+        q_pos = qi * q_block + jax.lax.broadcasted_iota(
+            jnp.int32, (q_block, kv_block), 0)
+        m = m & (q_pos >= kv_pos)
+    return m
+
+
+def _dq_kernel(q_ref, k_ref, v_ref, do_ref, o_ref, lse_ref, dq_ref,
+               dq_scr, delta_scr, *, scale, causal, q_block, kv_block,
+               n_kv, seq_kv):
+    qi, ki = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        dq_scr[...] = jnp.zeros_like(dq_scr)
+        do_ = o_ref[0].astype(jnp.float32)
+        delta_scr[...] = jnp.sum(
+            do_ref[0].astype(jnp.float32) * do_, axis=-1)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    # zero padded kv rows: 0 * NaN(padding) would poison the dots
+    kv_valid = (ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (kv_block, 1), 0)) < seq_kv
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m = _mask(s, qi, ki, q_block, kv_block, seq_kv, causal)
+    s = jnp.where(m, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta_scr[...][:, None])
+    ds = jnp.where(m, ds, 0.0)  # 0 * NaN(padding) guard
+    dq_scr[...] += jax.lax.dot_general(
+        ds, k, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale
+
+    @pl.when(ki == n_kv - 1)
+    def _finish():
+        dq_ref[0] = dq_scr[...].astype(dq_ref.dtype)
+
+
+def _dkv_kernel(q_ref, k_ref, v_ref, do_ref, o_ref, lse_ref,
+                dk_ref, dv_ref, dk_scr, dv_scr, *, scale, causal,
+                q_block, kv_block, n_q, seq_kv, seq_q):
+    ki, qi = pl.program_id(1), pl.program_id(2)
+
+    @pl.when(qi == 0)
+    def _init():
+        dk_scr[...] = jnp.zeros_like(dk_scr)
+        dv_scr[...] = jnp.zeros_like(dv_scr)
+
+    q = q_ref[0].astype(jnp.float32) * scale
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    do = do_ref[0].astype(jnp.float32)
+    o = o_ref[0].astype(jnp.float32)
+    lse = lse_ref[0]
+    # zero padded q and kv rows so they contribute nothing (and never
+    # poison the accumulating dots through 0 * NaN padding)
+    q_valid = (qi * q_block + jax.lax.broadcasted_iota(
+        jnp.int32, (q_block, 1), 0)) < seq_q
+    q = jnp.where(q_valid, q, 0.0)
+    do = jnp.where(q_valid, do, 0.0)
+    o = jnp.where(q_valid, o, 0.0)
+    kv_valid = (ki * kv_block + jax.lax.broadcasted_iota(
+        jnp.int32, (kv_block, 1), 0)) < seq_kv
+    k = jnp.where(kv_valid, k, 0.0)
+    v = jnp.where(kv_valid, v, 0.0)
+
+    delta = jnp.sum(do * o, axis=-1)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    m = _mask(s, qi, ki, q_block, kv_block, seq_kv, causal)
+    s = jnp.where(m, s, NEG_INF)
+    p = jnp.exp(s - lse[:, None])
+    p = jnp.where(q_valid, p, 0.0)
+    # dv += p^T @ do
+    dv_scr[...] += jax.lax.dot_general(
+        p, do, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    dp = jax.lax.dot_general(do, v, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    ds = p * (dp - delta[:, None])
+    ds = jnp.where(m & q_valid, ds, 0.0)  # padding guards
+    # dk += ds^T @ (q*scale)  (q already carries scale)
+    dk_scr[...] += jax.lax.dot_general(
+        ds, q, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+
+    @pl.when(qi == n_q - 1)
+    def _finish():
+        dk_ref[0] = dk_scr[...].astype(dk_ref.dtype)
+        dv_ref[0] = dv_scr[...].astype(dv_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "q_block", "kv_block", "interpret"))
+def flash_attention_bwd_bhsd(q, k, v, o, lse, do, *, causal=True,
+                             q_block=128, kv_block=128, interpret=False):
+    """q/o/do: [B, H, Sq, hd]; k/v: [B, KV, Skv, hd]; lse: [B, H, Sq].
+
+    Returns (dq [B,H,Sq,hd], dk_h [B,H,Skv,hd], dv_h [B,H,Skv,hd]) with
+    per-query-head dk/dv (sum over GQA groups in the caller).
+    """
+    import math
+    B, H, Sq, hd = q.shape
+    _, KV, Skv, _ = k.shape
+    G = H // KV
+    scale = 1.0 / math.sqrt(hd)
+    q_block = min(q_block, Sq)
+    kv_block = min(kv_block, Skv)
+    nq = pl.cdiv(Sq, q_block)
+    nk = pl.cdiv(Skv, kv_block)
+
+    qf = q.reshape(B * H, Sq, hd)
+    of = o.reshape(B * H, Sq, hd)
+    dof = do.reshape(B * H, Sq, hd)
+    lsef = lse.reshape(B * H, Sq)
+    kf = k.reshape(B * KV, Skv, hd)
+    vf = v.reshape(B * KV, Skv, hd)
+
+    def kv_head(bh):
+        return (bh // H) * KV + (bh % H) // G
+
+    q_spec = pl.BlockSpec((1, q_block, hd),
+                          lambda bh, qi, ki: (bh, qi, 0))
+    kv_spec = pl.BlockSpec((1, kv_block, hd),
+                           lambda bh, qi, ki: (kv_head(bh), ki, 0))
+    lse_spec = pl.BlockSpec((1, q_block), lambda bh, qi, ki: (bh, qi))
+
+    dq = pl.pallas_call(
+        functools.partial(_dq_kernel, scale=scale, causal=causal,
+                          q_block=q_block, kv_block=kv_block, n_kv=nk,
+                          seq_kv=Skv),
+        grid=(B * H, nq, nk),
+        in_specs=[q_spec, kv_spec, kv_spec, q_spec, q_spec, lse_spec],
+        out_specs=q_spec,
+        out_shape=jax.ShapeDtypeStruct((B * H, Sq, hd), q.dtype),
+        scratch_shapes=[pltpu.VMEM((q_block, hd), jnp.float32),
+                        pltpu.VMEM((q_block,), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, dof, of, lsef)
+
+    # pass B: q innermost; note the transposed grid index order
+    q_spec_b = pl.BlockSpec((1, q_block, hd),
+                            lambda bh, ki, qi: (bh, qi, 0))
+    kv_spec_b = pl.BlockSpec((1, kv_block, hd),
+                             lambda bh, ki, qi: (kv_head(bh), ki, 0))
+    kv_out_b = pl.BlockSpec((1, kv_block, hd),
+                            lambda bh, ki, qi: (bh, ki, 0))
+    lse_spec_b = pl.BlockSpec((1, q_block), lambda bh, ki, qi: (bh, qi))
+
+    dk_h, dv_h = pl.pallas_call(
+        functools.partial(_dkv_kernel, scale=scale, causal=causal,
+                          q_block=q_block, kv_block=kv_block, n_q=nq,
+                          seq_kv=Skv, seq_q=Sq),
+        grid=(B * H, nk, nq),
+        in_specs=[q_spec_b, kv_spec_b, kv_spec_b, q_spec_b, q_spec_b,
+                  lse_spec_b],
+        out_specs=[kv_out_b, kv_out_b],
+        out_shape=[jax.ShapeDtypeStruct((B * H, Skv, hd), q.dtype),
+                   jax.ShapeDtypeStruct((B * H, Skv, hd), q.dtype)],
+        scratch_shapes=[pltpu.VMEM((kv_block, hd), jnp.float32),
+                        pltpu.VMEM((kv_block, hd), jnp.float32)],
+        interpret=interpret,
+    )(qf, kf, vf, dof, of, lsef)
+
+    return (dq.reshape(B, H, Sq, hd),
+            dk_h.reshape(B, H, Skv, hd),
+            dv_h.reshape(B, H, Skv, hd))

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive softmax attn)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_reference(q, k, v, *, causal=True):
+    """q: [B, H, Sq, hd]; k/v: [B, KV, Skv, hd]. fp32 softmax math."""
+    B, H, Sq, hd = q.shape
+    _, KV, Skv, _ = k.shape
+    G = H // KV
+    qg = q.reshape(B, KV, G, Sq, hd).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bkgqh,bkph->bkgqp", qg, kf) / math.sqrt(hd)
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Skv)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqp,bkph->bkgqh", p, vf)
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)

@@ -1,0 +1,165 @@
+"""Pallas TPU kernel for GainSight's lifetime-extraction hot loop.
+
+The analytical frontend's dominant cost is the segmented reduction over
+the (addr, time)-sorted event stream: find segment boundaries (new address
+or write), and per segment compute first-write time, last-read time and
+read count, then bin the closed lifetimes into a histogram (paper Fig 8).
+
+On TPU this becomes a single sequential-grid pass: each grid step loads a
+block of events into VMEM, computes intra-block segment reductions with
+one-hot matmul-style masks (MXU/VPU friendly), merges the segment that
+straddles the block boundary through SMEM carry scalars, and accumulates
+the histogram in VMEM scratch.  Events stream through HBM exactly once.
+
+Inputs (sorted by (addr, time); padded by ops.py with write events at a
+sentinel address):
+  t[N] i32, addr[N] i32, w[N] i32 (1 = write)
+  edges[NB+1] f32 histogram bin edges (cycles)
+
+Outputs:
+  hist[NB]  f32  closed non-orphan lifetimes per bin
+  stats[8]  f32  (closed, orphans, sum_lt, max_lt, reads, writes, 0, 0)
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+I32_MAX = 2 ** 31 - 1  # python int: becomes an in-kernel literal
+
+
+def _lifetime_kernel(t_ref, a_ref, w_ref, edges_ref, hist_ref, stats_ref,
+                     hist_scr, stats_scr, carry_scr, *, block, n_blocks,
+                     n_bins):
+    bi = pl.program_id(0)
+
+    @pl.when(bi == 0)
+    def _init():
+        hist_scr[...] = jnp.zeros_like(hist_scr)
+        stats_scr[...] = jnp.zeros_like(stats_scr)
+        # carry: [prev_addr, seg_start, last_read, n_reads, started]
+        carry_scr[0] = jnp.int32(-2)   # impossible address
+        carry_scr[1] = jnp.int32(0)
+        carry_scr[2] = jnp.int32(-1)
+        carry_scr[3] = jnp.int32(0)
+        carry_scr[4] = jnp.int32(0)
+
+    t = t_ref[...]
+    a = a_ref[...]
+    w = w_ref[...].astype(bool)
+    edges = edges_ref[...]
+
+    prev_addr = carry_scr[0]
+    c_start = carry_scr[1]
+    c_lastr = carry_scr[2]
+    c_nread = carry_scr[3]
+    started = carry_scr[4]
+
+    prev_a = jnp.concatenate([prev_addr[None], a[:-1]])
+    boundary = (a != prev_a) | w
+    sid = jnp.cumsum(boundary.astype(jnp.int32))      # carry-segment = 0
+    nb = sid[-1]
+
+    ids = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)  # seg cols
+    O = sid[:, None] == ids                            # [event, seg]
+    r = ~w
+    t_col = t[:, None]
+
+    seg_min = jnp.where(O, t_col, I32_MAX).min(axis=0)            # [block]
+    seg_lastr = jnp.where(O & r[:, None], t_col, -1).max(axis=0)
+    seg_nread = jnp.sum((O & r[:, None]).astype(jnp.int32), axis=0)
+
+    # merge the carried segment into sid 0
+    seg_start = jnp.where(
+        jnp.arange(block) == 0,
+        jnp.where(started > 0, c_start, seg_min),
+        seg_min)
+    seg_lastr = jnp.where(
+        jnp.arange(block) == 0,
+        jnp.maximum(c_lastr, seg_lastr), seg_lastr)
+    seg_nread = jnp.where(
+        jnp.arange(block) == 0, c_nread + seg_nread, seg_nread)
+
+    # segments 0 .. nb-1 close in this block (segment nb stays open)
+    seg_ids = jax.lax.iota(jnp.int32, block)
+    closed = seg_ids < nb
+    # sid 0 only exists if a carry was live or block events extend it
+    sid0_events = jnp.sum((sid == 0).astype(jnp.int32))
+    closed = closed & ((seg_ids > 0) | (started > 0) | (sid0_events > 0))
+
+    has_read = seg_nread > 0
+    lt = jnp.where(closed & has_read,
+                   jnp.maximum(seg_lastr - seg_start, 0), 0)
+    live = closed & has_read
+    orphan = closed & (~has_read)
+
+    ltf = lt.astype(jnp.float32)
+    in_bin = (ltf[:, None] >= edges[None, :-1]) & \
+        (ltf[:, None] < edges[None, 1:]) & live[:, None]
+    hist_scr[...] += in_bin.astype(jnp.float32).sum(axis=0)
+
+    stats_scr[0] += jnp.sum(live.astype(jnp.float32))
+    stats_scr[1] += jnp.sum(orphan.astype(jnp.float32))
+    stats_scr[2] += jnp.sum(ltf * live.astype(jnp.float32))
+    stats_scr[3] = jnp.maximum(stats_scr[3], ltf.max())
+    stats_scr[4] += jnp.sum(r.astype(jnp.float32))
+    stats_scr[5] += jnp.sum(w.astype(jnp.float32))
+
+    # new carry = segment nb (the still-open one); sel picks exactly one
+    # element, so a masked sum extracts it (works for -1 sentinels too)
+    sel = seg_ids == nb
+    carry_scr[0] = a[-1]
+    carry_scr[1] = jnp.sum(jnp.where(sel, seg_start, 0))
+    carry_scr[2] = jnp.sum(jnp.where(sel, seg_lastr, 0))
+    carry_scr[3] = jnp.sum(jnp.where(sel, seg_nread, 0))
+    carry_scr[4] = jnp.int32(1)
+
+    @pl.when(bi == n_blocks - 1)
+    def _finish():
+        hist_ref[...] = hist_scr[...]
+        stats_ref[...] = stats_scr[...]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block", "n_bins", "interpret"))
+def lifetime_scan_sorted(t, addr, is_write, edges, *, block=256,
+                         n_bins=64, interpret=False):
+    """Inputs pre-sorted by (addr, time) and pre-padded to block multiple
+    (ops.py handles both).  Returns (hist [n_bins], stats [8])."""
+    n = t.shape[0]
+    assert n % block == 0
+    n_blocks = n // block
+    assert edges.shape[0] == n_bins + 1
+
+    hist, stats = pl.pallas_call(
+        functools.partial(_lifetime_kernel, block=block, n_blocks=n_blocks,
+                          n_bins=n_bins),
+        grid=(n_blocks,),
+        in_specs=[
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n_bins + 1,), lambda i: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n_bins,), lambda i: (0,)),
+            pl.BlockSpec((8,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_bins,), jnp.float32),
+            jax.ShapeDtypeStruct((8,), jnp.float32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((n_bins,), jnp.float32),
+            pltpu.VMEM((8,), jnp.float32),
+            pltpu.SMEM((5,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(t.astype(jnp.int32), addr.astype(jnp.int32),
+      is_write.astype(jnp.int32), edges.astype(jnp.float32))
+    return hist, stats

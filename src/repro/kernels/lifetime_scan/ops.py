@@ -1,0 +1,72 @@
+"""jit'd public wrapper: sort + pad + dispatch the lifetime-scan kernel.
+
+Padding protocol: events are lexsorted by (addr, time), then padded to a
+block multiple (plus at least one full pad slot) with *write* events at a
+sentinel address.  The first pad event closes the final real segment; every
+closed pad segment is a zero-read orphan at the sentinel address, so the
+wrapper subtracts the known pad contribution from the orphan count.  The
+still-open final pad segment is never counted.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.lifetime_scan.kernel import lifetime_scan_sorted
+
+SENTINEL = 2 ** 31 - 10
+
+
+def _on_tpu() -> bool:
+    try:
+        return jax.devices()[0].platform == "tpu"
+    except Exception:
+        return False
+
+
+def default_edges(n_bins: int = 64, lo_cycles: float = 1.0,
+                  hi_cycles: float = 1e8) -> np.ndarray:
+    """Log-spaced lifetime bins (cycles); final edge is +inf."""
+    e = np.logspace(np.log10(lo_cycles), np.log10(hi_cycles), n_bins)
+    return np.concatenate([[0.0], e[:-1], [np.inf]]).astype(np.float32)
+
+
+@partial(jax.jit, static_argnames=("block",))
+def _run(t, addr, w, edges, block):
+    n = t.shape[0]
+    order = jnp.lexsort((t, addr))
+    ts, as_, ws = t[order], addr[order], w[order]
+    n_pad = block - (n % block) if n % block else block
+    ts = jnp.concatenate([ts, jnp.full((n_pad,), ts[-1], ts.dtype)])
+    as_ = jnp.concatenate(
+        [as_, SENTINEL + jnp.arange(n_pad, dtype=as_.dtype)])
+    ws = jnp.concatenate([ws, jnp.ones((n_pad,), ws.dtype)])
+    hist, stats = lifetime_scan_sorted(
+        ts, as_, ws, edges, block=block, n_bins=edges.shape[0] - 1,
+        interpret=not _on_tpu())
+    # remove pad bookkeeping: n_pad-1 closed orphan pad segments, n_pad
+    # pad writes
+    stats = stats.at[1].add(-(n_pad - 1)).at[5].add(-n_pad)
+    return hist, stats
+
+
+def lifetime_histogram(time_cycles, addr, is_write, edges=None,
+                       block: int = 256):
+    """Aggregate lifetime histogram + stats over an (unsorted) event list.
+
+    Returns (hist [NB] f32, stats [8] f32); see kernel docstring for the
+    stats layout.
+    """
+    if edges is None:
+        edges = default_edges()
+    t = jnp.asarray(time_cycles, jnp.int32)
+    a = jnp.asarray(addr, jnp.int32)
+    w = jnp.asarray(is_write, jnp.int32)
+    if t.shape[0] == 0:
+        return (jnp.zeros(len(edges) - 1, jnp.float32),
+                jnp.zeros(8, jnp.float32))
+    return _run(t, a, w, jnp.asarray(edges, jnp.float32), block)

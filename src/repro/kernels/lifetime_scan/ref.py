@@ -1,0 +1,37 @@
+"""Pure-jnp oracle for the lifetime-scan kernel.
+
+Reuses the frontend's segmented extraction (``repro.core.lifetime``) and
+bins the result - the kernel must reproduce these aggregates exactly.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.lifetime import extract_lifetimes
+
+
+def lifetime_hist_reference(t, addr, is_write, edges):
+    """Returns (hist [NB], stats [8]) matching the kernel contract."""
+    stats = extract_lifetimes(
+        jnp.asarray(t, jnp.int32), jnp.asarray(addr),
+        jnp.asarray(is_write), jnp.ones_like(jnp.asarray(is_write), bool),
+        mode="scratchpad")
+    valid = np.asarray(stats.valid)
+    orphan = np.asarray(stats.orphan)
+    lt = np.asarray(stats.lifetime_cycles).astype(np.float64)
+    live = valid & ~orphan
+    edges = np.asarray(edges, np.float64)
+    hist = np.array([
+        ((lt >= lo) & (lt < hi) & live).sum()
+        for lo, hi in zip(edges[:-1], edges[1:])], np.float32)
+    w = np.asarray(is_write, bool)
+    out = np.zeros(8, np.float32)
+    out[0] = live.sum()
+    out[1] = orphan.sum()
+    out[2] = lt[live].sum()
+    out[3] = lt[live].max() if live.any() else 0.0
+    out[4] = (~w).sum()
+    out[5] = w.sum()
+    return hist, out

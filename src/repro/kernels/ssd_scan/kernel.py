@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid: (batch, chunks); the chunk axis is innermost and iterates
+sequentially on TPU, so the inter-chunk SSM state [h, p, n] lives in a
+VMEM scratch buffer and carries across chunks - the HBM-resident state
+tensor of a naive implementation never exists.
+
+Per chunk the kernel computes the quadratic intra-chunk term (two MXU
+matmuls over the [q, q] decay/score matrices) plus the state input/output
+terms, exactly mirroring ``ref.ssd_chunked``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, d_ref, y_ref,
+                state_scr, *, chunk):
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_scr[...] = jnp.zeros_like(state_scr)
+
+    x = x_ref[0, 0].astype(jnp.float32)      # [q, h, p]
+    dt = dt_ref[0, 0].astype(jnp.float32)    # [q, h]
+    Bm = b_ref[0, 0].astype(jnp.float32)     # [q, n]
+    Cm = c_ref[0, 0].astype(jnp.float32)     # [q, n]
+    A = a_ref[...].astype(jnp.float32)       # [h]
+    Dh = d_ref[...].astype(jnp.float32)      # [h]
+    q = x.shape[0]
+
+    da = dt * A                               # [q, h]
+    cum = jnp.cumsum(da, axis=0)
+    # intra-chunk decay L[i, j, h] = exp(cum_i - cum_j) for i >= j
+    seg = cum[:, None, :] - cum[None, :, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (q, q), 1)
+    decay = jnp.where(tri[:, :, None], jnp.exp(seg), 0.0)  # [q, q, h]
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [q, q]
+    xdt = x * dt[:, :, None]                  # [q, h, p]
+
+    w = cb[:, :, None] * decay                # [q, q, h]
+    # y_intra[i,h,p] = sum_j w[i,j,h] xdt[j,h,p]  (batched matmul over h)
+    wt = w.transpose(2, 0, 1)                 # [h, q, q]
+    xt = xdt.transpose(1, 0, 2)               # [h, q, p]
+    y_intra = jax.lax.dot_general(
+        wt, xt, (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32).transpose(1, 0, 2)  # [q, h, p]
+
+    state = state_scr[...]                    # [h, p, n]
+    # y_inter[i,h,p] = exp(cum_i) * sum_n C[i,n] state[h,p,n]
+    y_inter = jnp.einsum("in,hpn->ihp", Cm, state) * \
+        jnp.exp(cum)[:, :, None]
+
+    # state' = exp(cum_Q) state + sum_j exp(cum_Q - cum_j) dt_j B_j x_j
+    to_end = jnp.exp(cum[-1:, :] - cum) * dt  # [q, h]
+    s_in = jnp.einsum("jh,jn,jhp->hpn", to_end, Bm, x)
+    state_scr[...] = state * jnp.exp(cum[-1, :])[:, None, None] + s_in
+
+    y = y_intra + y_inter + x * Dh[None, :, None]
+    y_ref[0, 0] = y.astype(y_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk", "interpret"))
+def ssd_scan_chunked(x, dt, A, B, C, D, *, chunk=64, interpret=False):
+    """x: [b, l, h, p]; dt: [b, l, h]; A/D: [h]; B/C: [b, l, n].
+
+    l must be a multiple of `chunk` (ops.py pads).  Returns [b, l, h, p].
+    """
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    assert l % chunk == 0, "pad in ops.py"
+    nc = l // chunk
+
+    xr = x.reshape(b, nc, chunk, h, p)
+    dtr = dt.reshape(b, nc, chunk, h)
+    Br = B.reshape(b, nc, chunk, n)
+    Cr = C.reshape(b, nc, chunk, n)
+
+    grid = (b, nc)
+    out = pl.pallas_call(
+        functools.partial(_ssd_kernel, chunk=chunk),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, chunk, h, p), lambda bi, ci: (bi, ci, 0, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, h), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((h,), lambda bi, ci: (0,)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((1, 1, chunk, n), lambda bi, ci: (bi, ci, 0, 0)),
+            pl.BlockSpec((h,), lambda bi, ci: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, chunk, h, p),
+                               lambda bi, ci: (bi, ci, 0, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nc, chunk, h, p), x.dtype),
+        scratch_shapes=[pltpu.VMEM((h, p, n), jnp.float32)],
+        interpret=interpret,
+    )(xr, dtr, A.astype(jnp.float32), Br, Cr, D.astype(jnp.float32))
+    return out.reshape(b, l, h, p)

@@ -1,0 +1,107 @@
+"""Pure-jnp oracles for the Mamba-2 SSD (state-space duality) scan.
+
+Recurrence (per batch b, head h, channel p, state n):
+
+    s_t = exp(dt_t * A_h) * s_{t-1} + dt_t * B_t[n] * x_t[p]
+    y_t = sum_n C_t[n] * s_t[p, n]  (+ D_h * x_t[p])
+
+``ssd_sequential`` is the literal recurrence (oracle).  ``ssd_chunked`` is
+the production chunked form (lax.scan over chunks; quadratic intra-chunk
+term + inter-chunk state carry), mathematically identical and the reference
+for the Pallas kernel.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential(x, dt, A, B, C, D=None):
+    """x: [b,l,h,p]; dt: [b,l,h] (>0); A: [h] (<0); B,C: [b,l,n]."""
+    def step(s, inp):
+        x_t, dt_t, B_t, C_t = inp
+        da = jnp.exp(dt_t * A)                      # [b,h]
+        s = s * da[..., None, None] + jnp.einsum(
+            "bhp,bn->bhpn", x_t * dt_t[..., None], B_t)
+        y = jnp.einsum("bhpn,bn->bhp", s, C_t)
+        return s, y
+
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (x.astype(jnp.float32).transpose(1, 0, 2, 3),
+          dt.astype(jnp.float32).transpose(1, 0, 2),
+          B.astype(jnp.float32).transpose(1, 0, 2),
+          C.astype(jnp.float32).transpose(1, 0, 2))
+    _, ys = jax.lax.scan(step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    if D is not None:
+        y = y + x.astype(jnp.float32) * D[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_chunked(x, dt, A, B, C, D=None, chunk: int = 64):
+    """Chunked SSD: intra-chunk quadratic attention-like term plus
+    inter-chunk recurrent state (the SSD algorithm of Mamba-2 §6)."""
+    b, l, h, p = x.shape
+    n = B.shape[-1]
+    q = min(chunk, l)
+    pad = (-l) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    nc = x.shape[1] // q
+
+    xf = x.astype(jnp.float32).reshape(b, nc, q, h, p)
+    dtf = dt.astype(jnp.float32).reshape(b, nc, q, h)
+    Bf = B.astype(jnp.float32).reshape(b, nc, q, n)
+    Cf = C.astype(jnp.float32).reshape(b, nc, q, n)
+    Af = A.astype(jnp.float32)
+
+    def chunk_step(state, inp):
+        xc, dtc, Bc, Cc = inp          # [b,q,h,p], [b,q,h], [b,q,n]
+        da = dtc * Af                  # [b,q,h]
+        cum = jnp.cumsum(da, axis=1)   # inclusive within chunk
+        # intra-chunk: y_i += sum_{j<=i} (C_i.B_j) exp(cum_i-cum_j) dt_j x_j
+        seg = cum[:, :, None, :] - cum[:, None, :, :]      # [b,i,j,h]
+        causal = jnp.tril(jnp.ones((q, q), bool))
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(seg), 0.0)
+        cb = jnp.einsum("bin,bjn->bij", Cc, Bc)            # [b,i,j]
+        xdt = xc * dtc[..., None]                          # [b,j,h,p]
+        y_intra = jnp.einsum("bij,bijh,bjhp->bihp", cb, decay, xdt)
+        # inter-chunk: y_i += C_i . (exp(cum_i) * state)
+        y_inter = jnp.einsum("bin,bhpn->bihp", Cc, state) \
+            * jnp.exp(cum)[..., None]
+        # state update: s' = exp(cum_Q) s + sum_j exp(cum_Q-cum_j) dt_j B_j x_j
+        to_end = jnp.exp(cum[:, -1:, :] - cum)             # [b,j,h]
+        s_new = state * jnp.exp(cum[:, -1, :])[..., None, None] \
+            + jnp.einsum("bjh,bjn,bjhp->bhpn", to_end * dtc, Bc, xc)
+        return s_new, y_intra + y_inter
+
+    s0 = jnp.zeros((b, h, p, n), jnp.float32)
+    xs = (xf.transpose(1, 0, 2, 3, 4), dtf.transpose(1, 0, 2, 3),
+          Bf.transpose(1, 0, 2, 3), Cf.transpose(1, 0, 2, 3))
+    _, ys = jax.lax.scan(chunk_step, s0, xs)
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, nc * q, h, p)[:, :l]
+    if D is not None:
+        y = y + x.astype(jnp.float32)[:, :l] * D[None, None, :, None]
+    return y.astype(x.dtype)
+
+
+def ssd_decode_step(state, x_t, dt_t, A, B_t, C_t, D=None):
+    """One recurrent decode step. state: [b,h,p,n]; x_t: [b,h,p];
+    dt_t: [b,h]; B_t/C_t: [b,n]. Returns (new_state, y_t)."""
+    da = jnp.exp(dt_t.astype(jnp.float32) * A)
+    state = state * da[..., None, None] + jnp.einsum(
+        "bhp,bn->bhpn", (x_t * dt_t[..., None]).astype(jnp.float32),
+        B_t.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bn->bhp", state, C_t.astype(jnp.float32))
+    if D is not None:
+        y = y + x_t.astype(jnp.float32) * D[None, :, None]
+    return state, y.astype(x_t.dtype)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this
+module touches no jax device state - required by the dry-run protocol.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def _auto(n):
+    return (jax.sharding.AxisType.Auto,) * n
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+
+
+def make_host_mesh(preferred_model: int = 1):
+    """Mesh over whatever devices exist (tests / single host)."""
+    from repro.runtime.elastic import choose_mesh_shape
+    n = len(jax.devices())
+    shape, names = choose_mesh_shape(n, preferred_model)
+    return jax.make_mesh(shape, names, axis_types=_auto(len(shape)))

@@ -1,0 +1,146 @@
+"""GainSight profiling driver: the paper's workflow as a framework feature.
+
+For a given architecture, generate memory traces on the selected backend,
+run the analytical frontend, and emit the heterogeneous-memory report
+(JSON + console): data lifetimes, device projections, optimal composition.
+
+  PYTHONPATH=src python -m repro.launch.profile --arch tinyllama_1_1b \
+      --backend systolic --dataflow ws --pe 128
+  PYTHONPATH=src python -m repro.launch.profile --arch tinyllama_1_1b \
+      --backend gpu --seq 128
+  PYTHONPATH=src python -m repro.launch.profile --arch mamba2_130m \
+      --backend tpu --seq 64
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+import numpy as np
+
+from repro.backends.cachesim import HierarchyConfig, simulate_hierarchy
+from repro.backends.opstream import StreamBuilder, transformer_ops
+from repro.backends.systolic import GemmLayer, SystolicConfig, simulate
+from repro.configs.base import ShapeCell, get_config
+from repro.core import (HYBRID_GCRAM, SI_GCRAM, analyze_trace, compose,
+                        compute_stats, lifetimes_of_trace,
+                        short_lived_fraction)
+
+
+def transformer_gemms(cfg, seq: int, n_layers: int = 2):
+    """The GEMM list of a decoder block stack (systolic workload input)."""
+    hd = cfg.hd
+    kvd = cfg.kv_heads * hd
+    layers = []
+    for i in range(n_layers):
+        layers += [
+            GemmLayer(f"L{i}.qkv", seq, cfg.d_model + 2 * kvd, cfg.d_model),
+            GemmLayer(f"L{i}.scores", seq, seq, hd),
+            GemmLayer(f"L{i}.pv", seq, hd, seq),
+            GemmLayer(f"L{i}.o", seq, cfg.d_model, cfg.d_model),
+            GemmLayer(f"L{i}.up", seq, cfg.d_ff or cfg.d_model * 4,
+                      cfg.d_model),
+            GemmLayer(f"L{i}.down", seq, cfg.d_model,
+                      cfg.d_ff or cfg.d_model * 4),
+        ]
+    return layers
+
+
+def profile_systolic(cfg, seq, dataflow, pe, out):
+    sc = SystolicConfig(rows=pe, cols=pe, dataflow=dataflow)
+    trace, kstats = simulate(transformer_gemms(cfg, seq), sc)
+    report = analyze_trace(trace, mode="scratchpad")
+    report["kernels"] = kstats
+    _summarize(trace, report, ("ifmap", "filter", "ofmap"), "scratchpad",
+               out)
+    return report
+
+
+def profile_gpu(cfg, seq, out, sample=8):
+    sb = StreamBuilder(sample=sample)
+    transformer_ops(sb, cfg.d_model, max(cfg.n_heads, 1),
+                    max(cfg.kv_heads, 1), cfg.d_ff or 4 * cfg.d_model,
+                    seq, n_layers=2, moe_experts=cfg.moe_experts,
+                    moe_topk=cfg.moe_topk)
+    t, a, w = sb.finish()
+    trace = simulate_hierarchy(t, a, w, HierarchyConfig())
+    report = analyze_trace(trace, mode="cache")
+    report["kernels"] = [k.__dict__ for k in sb.kernels]
+    _summarize(trace, report, ("L1", "L2"), "cache", out)
+    return report
+
+
+def profile_tpu(cfg, seq, out):
+    from repro.backends.tpu_graph import trace_jaxpr
+    from repro.models.api import batch_specs, build
+    api = build(cfg)
+    shape = ShapeCell("p", "train", seq, 1)
+    bspec = batch_specs(cfg, shape)
+    params_sds = jax.eval_shape(lambda k: api.init(k)[0],
+                                jax.random.PRNGKey(0))
+    trace, ops = trace_jaxpr(api.loss, params_sds, bspec, sample=4)
+    report = analyze_trace(trace, mode="scratchpad")
+    report["n_ops"] = len(ops)
+    _summarize(trace, report, ("VMEM",), "scratchpad", out)
+    return report
+
+
+def _summarize(trace, report, subs, mode, out):
+    print(json.dumps(
+        {k: {kk: vv for kk, vv in v.items() if kk != "devices"}
+         for k, v in report["subpartitions"].items()}, indent=1,
+        default=str)[:1200])
+    for i, name in enumerate(subs):
+        if name not in report["subpartitions"]:
+            continue
+        raw = lifetimes_of_trace(trace.select(i), mode=mode)
+        st = compute_stats(trace, i, mode=mode)
+        comp = compose(st, raw=raw, clock_hz=trace.clock_hz)
+        f_si = short_lived_fraction(raw, trace.clock_hz,
+                                    SI_GCRAM.retention_s)
+        f_hy = short_lived_fraction(raw, trace.clock_hz,
+                                    HYBRID_GCRAM.retention_s)
+        print(f"{name}: short-lived {100 * f_si:.1f}% @Si-GC(1us) / "
+              f"{100 * f_hy:.1f}% @Hy-GC(10us)   composition "
+              f"{comp.summary()}")
+        report["subpartitions"][name]["composition"] = {
+            "devices": list(comp.devices),
+            "capacity_fractions": comp.capacity_fractions.tolist(),
+            "energy_vs_sram": comp.energy_vs_sram,
+        }
+    if out:
+        with open(out, "w") as f:
+            json.dump(report, f, indent=1, default=str)
+        print(f"report -> {out}")
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--backend", default="systolic",
+                    choices=["systolic", "gpu", "tpu"])
+    ap.add_argument("--dataflow", default="ws", choices=["is", "ws", "os"])
+    ap.add_argument("--pe", type=int, default=128)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    if args.backend == "systolic":
+        # systolic profiling uses the full config's GEMM dims (trace size
+        # is governed by seq, not params)
+        cfg = get_config(args.arch, smoke=False)
+        return profile_systolic(cfg, args.seq, args.dataflow, args.pe,
+                                args.out)
+    if args.backend == "gpu":
+        cfg = get_config(args.arch, smoke=False)
+        return profile_gpu(cfg, args.seq, args.out)
+    return profile_tpu(cfg, args.seq, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,138 @@
+"""Step-function assembly shared by train.py, serve.py and dryrun.py.
+
+Everything the dry-run lowers comes from here, so the compiled artifact
+matches the real training/serving path exactly.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import (BATCH, MODEL, SEQ, named_sharding,
+                                        tree_shardings)
+from repro.models.api import ModelApi, batch_shardings, batch_specs
+from repro.optim import AdamW, compress_gradients, cosine_schedule
+
+
+def make_optimizer(cfg: ArchConfig, total_steps: int = 10000) -> AdamW:
+    warmup = max(1, min(200, total_steps // 10))
+    return AdamW(lr=cosine_schedule(3e-4, warmup, total_steps))
+
+
+def make_train_step(api: ModelApi, optimizer: AdamW,
+                    compress_grads: bool = False):
+    def train_step(params, opt_state, batch):
+        loss, grads = jax.value_and_grad(api.loss)(params, batch)
+        if compress_grads:
+            grads, err = compress_gradients(
+                grads, opt_state.get("grad_err"))
+        params, opt_state, metrics = optimizer.update(
+            grads, opt_state, params)
+        if compress_grads:
+            opt_state["grad_err"] = err
+        metrics["loss"] = loss
+        return params, opt_state, metrics
+    return train_step
+
+
+def make_prefill_step(api: ModelApi):
+    def prefill_step(params, batch):
+        return api.prefill(params, batch)
+    return prefill_step
+
+
+def make_serve_step(api: ModelApi):
+    def serve_step(params, cache, token, index):
+        return api.decode(params, cache, token, index)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# Abstract shapes + shardings for the dry-run / launcher
+# ---------------------------------------------------------------------------
+
+def input_specs(arch: str, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input of a cell
+    (weak-type-correct, shardable, no device allocation)."""
+    from repro.configs.base import SHAPES, get_config
+    from repro.models.api import build
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    api = build(cfg)
+    if shape.kind == "decode":
+        (cache_s, tok_s, idx_s), _ = decode_input_specs(api, shape)
+        return {"cache": cache_s, "token": tok_s, "index": idx_s}
+    return batch_specs(cfg, shape)
+
+
+def abstract_params(api: ModelApi, key=None):
+    """(param ShapeDtypeStructs, logical spec templates) - no allocation.
+
+    Spec templates are static python and escape the eval_shape trace via a
+    side channel.
+    """
+    key = jax.random.PRNGKey(0) if key is None else key
+    box = {}
+
+    def init_only(k):
+        p, s = api.init(k)
+        box["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(init_only, key)
+    return shapes, box["specs"]
+
+
+def cache_specs_templates(cfg: ArchConfig, cache_shapes,
+                          shard_seq: bool = False):
+    """Logical templates for a decode cache pytree.
+
+    shard_seq: long-context decode (batch < data-axis size) shards the
+    sequence dimension of attention caches instead of the batch (SP).
+    """
+    def leaf_template(path, leaf):
+        name = "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+        nd = len(leaf.shape)
+        if nd == 5:   # [L, B, S, KV, hd] attention cache
+            if shard_seq:
+                return (None, None, SEQ, MODEL, None)
+            return (None, BATCH, None, MODEL, None)
+        if "ssm" in name and nd == 5:
+            return (None, BATCH, None, None, None)
+        if nd == 4:   # [L, B, K-1, conv] or [L, B, nh, ...]
+            return (None, BATCH, None, None)
+        if nd == 3:
+            return (None, BATCH, None)
+        return tuple(None for _ in leaf.shape)
+
+    return jax.tree_util.tree_map_with_path(leaf_template, cache_shapes)
+
+
+def decode_input_specs(api: ModelApi, shape: ShapeCell):
+    """(arg shapes, arg templates) for serve_step: (cache, token, index).
+
+    Cache shapes come from the family's cache constructor (or an
+    eval_shape over prefill for the enc-dec family).
+    """
+    cfg = api.cfg
+    B, S = shape.global_batch, shape.seq_len
+    if cfg.family == "audio":
+        pf_shape = ShapeCell("tmp", "prefill", S, B)
+        pshapes, _ = abstract_params(api)
+        pf_batch = batch_specs(cfg, pf_shape)
+        _, cache_shapes = jax.eval_shape(api.prefill, pshapes, pf_batch)
+    else:
+        cache_shapes = api.init_cache_shapes(B, S)
+    # shard sequence instead of batch when batch can't cover the data axis
+    shard_seq = B == 1
+    cache_tpl = cache_specs_templates(cfg, cache_shapes,
+                                      shard_seq=shard_seq)
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    token_tpl = (BATCH,) if not shard_seq else (None,)
+    return ((cache_shapes, token, index), (cache_tpl, token_tpl, ()))

@@ -1,0 +1,9 @@
+"""Model zoo: every assigned architecture as a functional JAX model.
+
+  layers       - shared building blocks (norms, RoPE, attention, MLP, MoE)
+  transformer  - decoder-only LM (dense / GQA / MoE / VLM-stub)
+  mamba2       - attention-free SSD (state-space duality)
+  hybrid       - Zamba2-style Mamba2 stack + shared attention block
+  whisper      - encoder-decoder backbone with stubbed conv frontend
+  api          - family dispatch: init / train-loss / prefill / decode
+"""

@@ -1,0 +1,179 @@
+"""Family dispatch: one uniform surface over every assigned architecture.
+
+  init(key)                  -> (params, spec_templates)
+  loss(params, batch)        -> scalar (train objective)
+  prefill(params, batch)     -> (logits, cache)
+  decode(params, cache, token, index) -> (logits, cache)
+  batch_specs(shape)         -> ShapeDtypeStruct pytree for the dry-run
+  batch_shardings(shape)     -> logical templates mirroring batch_specs
+  make_batch(key, shape)     -> concrete synthetic batch (smoke/examples)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ArchConfig, ShapeCell
+from repro.distributed.sharding import BATCH, MODEL
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelApi:
+    cfg: ArchConfig
+    init: Callable
+    loss: Callable
+    prefill: Callable
+    decode: Callable
+    init_cache_shapes: Callable   # (batch, seq) -> cache eval_shape pytree
+
+    def batch_specs(self, shape: ShapeCell):
+        return batch_specs(self.cfg, shape)
+
+    def batch_shardings(self, shape: ShapeCell):
+        return batch_shardings(self.cfg, shape)
+
+    def make_batch(self, key, shape: ShapeCell):
+        return make_batch(self.cfg, key, shape)
+
+
+def build(cfg: ArchConfig) -> ModelApi:
+    fam = cfg.family
+    if fam in ("dense", "moe", "vlm"):
+        from repro.models import transformer as T
+
+        def loss(params, batch):
+            return T.loss_fn(params, cfg, batch)
+
+        def prefill(params, batch):
+            return T.prefill(params, cfg, batch["tokens"],
+                             batch.get("vision"))
+
+        def decode(params, cache, token, index):
+            return T.decode_step(params, cfg, cache, token, index)
+
+        def cache_shapes(batch, seq):
+            return jax.eval_shape(lambda: T.init_kv_cache(cfg, batch, seq))
+
+        return ModelApi(cfg, lambda k: T.init_lm(k, cfg), loss, prefill,
+                        decode, cache_shapes)
+
+    if fam == "ssm":
+        from repro.models import mamba2 as M
+
+        def loss(params, batch):
+            return M.loss_fn(params, cfg, batch)
+
+        def prefill(params, batch):
+            return M.prefill(params, cfg, batch["tokens"])
+
+        def decode(params, cache, token, index):
+            return M.decode_step(params, cfg, cache, token, index)
+
+        def cache_shapes(batch, seq):
+            return jax.eval_shape(
+                lambda: M.init_ssm_cache(cfg, cfg.n_layers, batch))
+
+        return ModelApi(cfg, lambda k: M.init_lm(k, cfg), loss, prefill,
+                        decode, cache_shapes)
+
+    if fam == "hybrid":
+        from repro.models import hybrid as H
+
+        def loss(params, batch):
+            return H.loss_fn(params, cfg, batch)
+
+        def prefill(params, batch):
+            return H.prefill(params, cfg, batch["tokens"])
+
+        def decode(params, cache, token, index):
+            return H.decode_step(params, cfg, cache, token, index)
+
+        def cache_shapes(batch, seq):
+            return jax.eval_shape(lambda: H.init_cache(cfg, batch, seq))
+
+        return ModelApi(cfg, lambda k: H.init_lm(k, cfg), loss, prefill,
+                        decode, cache_shapes)
+
+    if fam == "audio":
+        from repro.models import whisper as W
+
+        def loss(params, batch):
+            return W.loss_fn(params, cfg, batch)
+
+        def prefill(params, batch):
+            return W.prefill(params, cfg, batch["tokens"],
+                             batch["frames"])
+
+        def decode(params, cache, token, index):
+            return W.decode_step(params, cfg, cache, token, index)
+
+        def cache_shapes(batch, seq):
+            # needs params for cross-kv shapes; resolved in dryrun via
+            # eval_shape over prefill instead.
+            raise NotImplementedError
+
+        return ModelApi(cfg, lambda k: W.init_lm(k, cfg), loss, prefill,
+                        decode, cache_shapes)
+
+    raise ValueError(f"unknown family {fam}")
+
+
+# ---------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins; no allocation) + shardings
+# ---------------------------------------------------------------------------
+
+def batch_specs(cfg: ArchConfig, shape: ShapeCell):
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    bf16 = jnp.bfloat16
+    sds = jax.ShapeDtypeStruct
+    if shape.kind == "train":
+        batch = {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["vision"] = sds((B, cfg.vision_tokens, cfg.d_model), bf16)
+        if cfg.family == "audio":
+            batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), bf16)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": sds((B, S), i32)}
+        if cfg.family == "vlm":
+            batch["vision"] = sds((B, cfg.vision_tokens, cfg.d_model), bf16)
+        if cfg.family == "audio":
+            batch["frames"] = sds((B, cfg.enc_seq, cfg.d_model), bf16)
+        return batch
+    if shape.kind == "decode":
+        return {"token": sds((B,), i32), "index": sds((), i32)}
+    raise ValueError(shape.kind)
+
+
+def batch_shardings(cfg: ArchConfig, shape: ShapeCell):
+    if shape.kind in ("train", "prefill"):
+        out = {k: (BATCH, None) for k in ("tokens", "labels")
+               if not (shape.kind == "prefill" and k == "labels")}
+        if cfg.family == "vlm":
+            out["vision"] = (BATCH, None, None)
+        if cfg.family == "audio":
+            out["frames"] = (BATCH, None, None)
+        return out
+    return {"token": (BATCH,), "index": ()}
+
+
+def make_batch(cfg: ArchConfig, key, shape: ShapeCell):
+    specs = batch_specs(cfg, shape)
+
+    def synth(path, s):
+        k = jax.random.fold_in(key, hash(str(path)) % (2 ** 31))
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            if s.shape == ():
+                return jnp.int32(0)
+            return jax.random.randint(k, s.shape, 0, max(cfg.vocab, 2),
+                                      dtype=s.dtype)
+        return jax.random.normal(k, s.shape, jnp.float32).astype(s.dtype)
+
+    return {k: synth(k, v) for k, v in specs.items()}

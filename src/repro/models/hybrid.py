@@ -1,0 +1,157 @@
+"""Zamba2-style hybrid: Mamba-2 backbone + one *shared* attention block.
+
+The shared attention(+MLP) block's parameters are reused at every
+application point (every ``attn_every`` Mamba blocks), Zamba's signature
+parameter-sharing trick.  Each application point still has its own KV cache
+(the activations differ even though the weights are shared).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import BATCH, MODEL, constrain
+from repro.models import layers as L
+from repro.models import mamba2 as M
+
+
+def n_attn_apps(cfg: ArchConfig) -> int:
+    return cfg.n_layers // cfg.attn_every
+
+
+def init_lm(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    D, V = cfg.d_model, cfg.vocab
+    k_embed, k_layers, k_attn, k_mlp, k_out = jax.random.split(key, 5)
+    keys = jax.random.split(k_layers, cfg.n_layers)
+    ap, as_ = L.init_attention(k_attn, cfg, dtype)
+    mp, ms = L.init_mlp(k_mlp, D, cfg.d_ff, dtype)
+    params = {
+        "embed": L._dense_init(k_embed, (V, D), dtype, scale=0.02),
+        "layers": jax.vmap(lambda k: M.init_mamba_block(k, cfg, dtype)[0])(
+            keys),
+        "shared": {"ln1": jnp.ones((D,), dtype), "attn": ap,
+                   "ln2": jnp.ones((D,), dtype), "mlp": mp},
+        "ln_f": jnp.ones((D,), dtype),
+        "unembed": L._dense_init(k_out, (D, V), dtype, scale=0.02),
+    }
+    _, bs = M.init_mamba_block(jax.random.PRNGKey(0), cfg, dtype)
+    specs = {
+        "embed": (None, MODEL),
+        "layers": jax.tree.map(lambda t: (None,) + t, bs,
+                               is_leaf=lambda t: isinstance(t, tuple)),
+        "shared": {"ln1": (None,), "attn": as_, "ln2": (None,),
+                   "mlp": ms},
+        "ln_f": (None,),
+        "unembed": (None, MODEL),
+    }
+    return params, specs
+
+
+def _shared_attn(params, cfg, x, positions, kv=None, cache_index=None):
+    sp = params["shared"]
+    inv = L.rope_freqs(cfg.hd, cfg.rope_fraction)
+    h, new_kv = L.attention_block(
+        sp["attn"], cfg, L.apply_norm(cfg.norm, x, sp["ln1"]),
+        positions=positions, causal=True, kv_cache=kv,
+        cache_index=cache_index, inv_freqs=inv)
+    x = x + h
+    x = x + L.mlp_block(sp["mlp"], L.apply_norm(cfg.norm, x, sp["ln2"]))
+    return x, new_kv
+
+
+def forward(params, cfg: ArchConfig, tokens, cache=None, cache_index=None):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    x = constrain(x, (BATCH, None, None))
+    A = cfg.attn_every
+    G = n_attn_apps(cfg)
+    if cache_index is not None:
+        positions = cache_index + jnp.arange(S)
+    else:
+        positions = jnp.arange(S)
+
+    new_cache = None
+    if cache is None:
+        def body(carry, p):
+            y, _, _ = M.mamba_block(p, cfg, carry)
+            return y, None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        for g in range(G):
+            grp = jax.tree.map(lambda a: a[g * A:(g + 1) * A],
+                               params["layers"])
+            x, _ = jax.lax.scan(body_fn, x, grp)
+            x, _ = _shared_attn(params, cfg, x, positions)
+        # trailing mamba layers (if n_layers % attn_every != 0)
+        if G * A < cfg.n_layers:
+            grp = jax.tree.map(lambda a: a[G * A:], params["layers"])
+            x, _ = jax.lax.scan(body_fn, x, grp)
+    else:
+        def body(carry, xs):
+            p, ssm_s, conv_s = xs
+            y, ns, ncv = M.mamba_block(p, cfg, carry, ssm_state=ssm_s,
+                                       conv_state=conv_s)
+            return y, (ns, ncv)
+        ssm_n, conv_n, kv_n = [], [], []
+        for g in range(G):
+            sl = slice(g * A, (g + 1) * A)
+            grp = jax.tree.map(lambda a: a[sl], params["layers"])
+            x, (ns, ncv) = jax.lax.scan(
+                body, x, (grp, cache["ssm"][sl], cache["conv"][sl]))
+            kv = (cache["attn_k"][g], cache["attn_v"][g])
+            x, (nk, nv) = _shared_attn(params, cfg, x, positions, kv,
+                                       cache_index)
+            ssm_n.append(ns)
+            conv_n.append(ncv)
+            kv_n.append((nk, nv))
+        if G * A < cfg.n_layers:
+            sl = slice(G * A, cfg.n_layers)
+            grp = jax.tree.map(lambda a: a[sl], params["layers"])
+            x, (ns, ncv) = jax.lax.scan(
+                body, x, (grp, cache["ssm"][sl], cache["conv"][sl]))
+            ssm_n.append(ns)
+            conv_n.append(ncv)
+        new_cache = {
+            "ssm": jnp.concatenate(ssm_n, 0),
+            "conv": jnp.concatenate(conv_n, 0),
+            "attn_k": jnp.stack([k for k, _ in kv_n]),
+            "attn_v": jnp.stack([v for _, v in kv_n]),
+        }
+    x = L.apply_norm(cfg.norm, x, params["ln_f"])
+    return x, new_cache
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_seq: int):
+    c = M.init_ssm_cache(cfg, cfg.n_layers, batch)
+    G = n_attn_apps(cfg)
+    KV, hd = cfg.kv_heads, cfg.hd
+    c["attn_k"] = jnp.zeros((G, batch, max_seq, KV, hd), jnp.bfloat16)
+    c["attn_v"] = jnp.zeros((G, batch, max_seq, KV, hd), jnp.bfloat16)
+    return c
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    from repro.models.transformer import chunked_ce_loss
+    hidden, _ = forward(params, cfg, batch["tokens"])
+    return chunked_ce_loss(params, cfg, hidden, batch["labels"])
+
+
+def prefill(params, cfg: ArchConfig, tokens):
+    from repro.models.transformer import unembed_matrix
+    B, S = tokens.shape
+    cache = init_cache(cfg, B, S)
+    hidden, _ = forward(params, cfg, tokens)
+    W = unembed_matrix(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], W)
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, index):
+    from repro.models.transformer import unembed_matrix
+    hidden, new_cache = forward(params, cfg, token[:, None], cache=cache,
+                                cache_index=index)
+    W = unembed_matrix(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], W)
+    return logits, new_cache

@@ -1,0 +1,305 @@
+"""Decoder-only transformer LM (dense / GQA / MoE / VLM-stub families).
+
+Layer stack runs under ``lax.scan`` over stacked parameters with optional
+remat, so the HLO stays one-layer-sized for 95-layer models.  The loss is
+vocab-chunked cross-entropy (scan over token chunks) so ``tokens x vocab``
+logits are never materialized.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import BATCH, FSDP, MODEL, constrain
+from repro.models import layers as L
+
+
+def _stack_init(key, n, init_fn):
+    """vmap an init over the layer dimension -> leaves [n, ...]."""
+    keys = jax.random.split(key, n)
+    params = jax.vmap(init_fn)(keys)
+    return params
+
+
+def init_lm(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    D, V = cfg.d_model, cfg.vocab
+    k_embed, k_layers, k_out, k_vis = jax.random.split(key, 4)
+
+    def layer_init(k):
+        ka, km, kmoe = jax.random.split(k, 3)
+        p = {"ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype)}
+        s = {"ln1": (None,), "ln2": (None,)}
+        ap, as_ = L.init_attention(ka, cfg, dtype)
+        p["attn"], s["attn"] = ap, as_
+        if cfg.moe_experts:
+            mp, ms = L.init_moe(kmoe, cfg, dtype)
+            p["moe"], s["moe"] = mp, ms
+        else:
+            mp, ms = L.init_mlp(km, D, cfg.d_ff, dtype)
+            p["mlp"], s["mlp"] = mp, ms
+        return p, s
+
+    def dense_layer_init(k):
+        ka, km = jax.random.split(k, 2)
+        p = {"ln1": jnp.ones((D,), dtype), "ln2": jnp.ones((D,), dtype)}
+        s = {"ln1": (None,), "ln2": (None,)}
+        ap, as_ = L.init_attention(ka, cfg, dtype)
+        p["attn"], s["attn"] = ap, as_
+        mp, ms = L.init_mlp(km, D, cfg.d_ff, dtype)
+        p["mlp"], s["mlp"] = mp, ms
+        return p, s
+
+    n_dense = cfg.moe_first_dense if cfg.moe_experts else 0
+    n_main = cfg.n_layers - n_dense
+
+    params = {"embed": L._dense_init(k_embed, (V, D), dtype, scale=0.02)}
+    specs = {"embed": (None, MODEL)}
+    if n_dense:
+        params["dense_layers"] = _stack_init(
+            jax.random.fold_in(k_layers, 1), n_dense,
+            lambda k: dense_layer_init(k)[0])
+        _, ls = dense_layer_init(jax.random.PRNGKey(0))
+        specs["dense_layers"] = jax.tree.map(
+            lambda t: (None,) + t, ls, is_leaf=lambda t: isinstance(t, tuple))
+    params["layers"] = _stack_init(
+        k_layers, n_main, lambda k: layer_init(k)[0])
+    _, ls = layer_init(jax.random.PRNGKey(0))
+    specs["layers"] = jax.tree.map(
+        lambda t: (None,) + t, ls, is_leaf=lambda t: isinstance(t, tuple))
+    params["ln_f"] = jnp.ones((D,), dtype)
+    specs["ln_f"] = (None,)
+    if not cfg.tie_embeddings:
+        params["unembed"] = L._dense_init(k_out, (D, V), dtype, scale=0.02)
+        specs["unembed"] = (None, MODEL)
+    if cfg.vision_tokens:
+        params["vision_proj"] = L._dense_init(k_vis, (D, D), dtype)
+        specs["vision_proj"] = (None, None)
+    return params, specs
+
+
+def _layer_apply(cfg, inv_freqs, p, x, positions, kv=None, cache_index=None):
+    h, new_kv = L.attention_block(
+        p["attn"], cfg, L.apply_norm(cfg.norm, x, p["ln1"]),
+        positions=positions, causal=True, kv_cache=kv,
+        cache_index=cache_index, inv_freqs=inv_freqs)
+    x = x + h
+    xn = L.apply_norm(cfg.norm, x, p["ln2"])
+    if "moe" in p:
+        y, aux = L.moe_block(p["moe"], cfg, xn)
+    else:
+        y, aux = L.mlp_block(p["mlp"], xn, cfg), 0.0
+    return x + y, new_kv, aux
+
+
+def forward(params, cfg: ArchConfig, tokens, *, extra_embeds=None,
+            kv_caches=None, cache_index=None):
+    """Returns (hidden [B,S,D], new_kv_caches, aux_loss)."""
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if extra_embeds is not None:
+        ve = jnp.einsum("bsd,de->bse", extra_embeds,
+                        params["vision_proj"]).astype(x.dtype)
+        x = jnp.concatenate([ve, x], axis=1)
+        S = x.shape[1]
+    x = constrain(x, (BATCH, None, None))
+    if cache_index is not None:
+        positions = cache_index + jnp.arange(S)
+    else:
+        positions = jnp.arange(S)
+    inv_freqs = L.rope_freqs(cfg.hd, cfg.rope_fraction)
+
+    aux_total = 0.0
+
+    def run_stack(x, stack, caches):
+        nonlocal aux_total
+
+        if caches is None:
+            def body(carry, p):
+                x, aux = carry
+                x, _, aux_l = _layer_apply(
+                    cfg, inv_freqs, p, x, positions, None, None)
+                return (x, aux + aux_l), None
+            xs = stack
+        else:
+            def body(carry, xs):
+                x, aux = carry
+                p, kv = xs
+                x, new_kv, aux_l = _layer_apply(
+                    cfg, inv_freqs, p, x, positions, kv, cache_index)
+                return (x, aux + aux_l), new_kv
+            xs = (stack, caches)
+
+        if cfg.remat and cfg.save_proj_remat:
+            # keep post-TP-reduce projection outputs: the backward replay
+            # skips the forward all-reduces (§Perf 'save_proj')
+            policy = jax.checkpoint_policies.save_only_these_names(
+                "proj_out")
+            body_fn = jax.checkpoint(body, policy=policy)
+        elif cfg.remat:
+            body_fn = jax.checkpoint(body)
+        else:
+            body_fn = body
+        (x, aux), new_caches = jax.lax.scan(body_fn, (x, 0.0), xs)
+        aux_total = aux_total + aux
+        return x, new_caches
+
+    def run_stack_inplace(x, stack, caches):
+        """§Perf 'decode_inplace': the stacked cache rides the scan carry;
+        each layer issues one single-token DUS instead of the scan
+        re-stacking the whole [L, B, S, KV, hd] cache as an output."""
+        nonlocal aux_total
+        ck_all, cv_all = caches
+        n = jax.tree.leaves(stack)[0].shape[0]
+
+        def body(carry, xs):
+            x, aux, ck_all, cv_all = carry
+            p, li = xs
+            h, (ck_all, cv_all) = L.attention_block(
+                p["attn"], cfg, L.apply_norm(cfg.norm, x, p["ln1"]),
+                positions=positions, causal=True,
+                cache_index=cache_index, inv_freqs=inv_freqs,
+                stacked_cache=(ck_all, cv_all), layer_index=li)
+            x = x + h
+            xn = L.apply_norm(cfg.norm, x, p["ln2"])
+            if "moe" in p:
+                y, aux_l = L.moe_block(p["moe"], cfg, xn)
+            else:
+                y, aux_l = L.mlp_block(p["mlp"], xn, cfg), 0.0
+            return (x + y, aux + aux_l, ck_all, cv_all), None
+
+        (x, aux, ck_all, cv_all), _ = jax.lax.scan(
+            body, (x, 0.0, ck_all, cv_all), (stack, jnp.arange(n)))
+        aux_total = aux_total + aux
+        return x, (ck_all, cv_all)
+
+    inplace = (cfg.decode_inplace and kv_caches is not None and
+               tokens.shape[1] == 1 and extra_embeds is None)
+    runner = run_stack_inplace if inplace else run_stack
+
+    new_kv = {}
+    if "dense_layers" in params:
+        caches = kv_caches["dense"] if kv_caches is not None else None
+        x, new_kv["dense"] = runner(x, params["dense_layers"], caches)
+    caches = kv_caches["main"] if kv_caches is not None else None
+    x, new_kv["main"] = runner(x, params["layers"], caches)
+    x = L.apply_norm(cfg.norm, x, params["ln_f"])
+    return x, (new_kv if kv_caches is not None else None), aux_total
+
+
+def unembed_matrix(params, cfg):
+    if cfg.tie_embeddings:
+        return params["embed"].T
+    return params["unembed"]
+
+
+def chunked_ce_loss(params, cfg: ArchConfig, hidden, labels, mask=None):
+    """Cross entropy over vocab, scanned in token chunks.
+
+    hidden: [B, S, D]; labels: [B, S].  TP-friendly: the label logit is
+    recovered with a one-hot reduction instead of a sharded-axis gather.
+    """
+    B, S, D = hidden.shape
+    V = cfg.vocab
+    h = hidden.reshape(B * S, D)
+    y = labels.reshape(B * S)
+    m = (jnp.ones_like(y, jnp.float32) if mask is None
+         else mask.reshape(B * S).astype(jnp.float32))
+    W = unembed_matrix(params, cfg)
+
+    C = min(cfg.loss_chunk, h.shape[0])
+    n_chunks = h.shape[0] // C
+    rem = h.shape[0] - n_chunks * C
+
+    def chunk_loss(hc, yc, mc):
+        logits = jnp.einsum("td,dv->tv", hc, W).astype(jnp.float32)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        onehot = jax.nn.one_hot(yc, V, dtype=jnp.float32)
+        gold = jnp.sum(logits * onehot, axis=-1)
+        return jnp.sum((lse - gold) * mc), jnp.sum(mc)
+
+    if cfg.ce_recompute:
+        # §Perf: don't save the fp32 logits chunks as scan residuals -
+        # recompute them in the backward pass (kills the dominant
+        # [n_chunks, C, V] fp32 HBM stacks of the baseline).
+        chunk_loss = jax.checkpoint(chunk_loss)
+
+    def body(carry, i):
+        tot, cnt = carry
+        hc = jax.lax.dynamic_slice_in_dim(h, i * C, C)
+        yc = jax.lax.dynamic_slice_in_dim(y, i * C, C)
+        mc = jax.lax.dynamic_slice_in_dim(m, i * C, C)
+        l, n = chunk_loss(hc, yc, mc)
+        return (tot + l, cnt + n), None
+
+    (tot, cnt), _ = jax.lax.scan(
+        body, (jnp.float32(0), jnp.float32(0)), jnp.arange(n_chunks))
+    if rem:
+        l, n = chunk_loss(h[n_chunks * C:], y[n_chunks * C:],
+                          m[n_chunks * C:])
+        tot, cnt = tot + l, cnt + n
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    extra = batch.get("vision") if isinstance(batch, dict) else None
+    hidden, _, aux = forward(params, cfg, batch["tokens"],
+                             extra_embeds=extra)
+    if extra is not None:
+        hidden = hidden[:, extra.shape[1]:]  # loss on text positions only
+    loss = chunked_ce_loss(params, cfg, hidden, batch["labels"])
+    return loss + 0.01 * aux
+
+
+# ---------------------------------------------------------------------------
+# Serving
+# ---------------------------------------------------------------------------
+
+def init_kv_cache(cfg: ArchConfig, batch: int, max_seq: int,
+                  dtype=jnp.bfloat16):
+    KV, hd = cfg.kv_heads, cfg.hd
+    n_dense = cfg.moe_first_dense if cfg.moe_experts else 0
+    n_main = cfg.n_layers - n_dense
+
+    def mk(n):
+        return (jnp.zeros((n, batch, max_seq, KV, hd), dtype),
+                jnp.zeros((n, batch, max_seq, KV, hd), dtype))
+
+    cache = {"main": mk(n_main)}
+    if n_dense:
+        cache["dense"] = mk(n_dense)
+    return cache
+
+
+def kv_cache_specs():
+    """Logical sharding for KV caches: batch over BATCH, heads over MODEL."""
+    leaf = (None, BATCH, None, MODEL, None)
+    return leaf
+
+
+def prefill(params, cfg: ArchConfig, tokens, extra_embeds=None):
+    """Full forward; returns (last-position logits, kv_cache)."""
+    B, S = tokens.shape
+    s_total = S + (extra_embeds.shape[1] if extra_embeds is not None else 0)
+    cache = init_kv_cache(cfg, B, s_total)
+    # run forward threading caches at index 0 so k/v land in the cache
+    hidden, new_cache, _ = forward(
+        params, cfg, tokens, extra_embeds=extra_embeds,
+        kv_caches=cache, cache_index=jnp.int32(0))
+    W = unembed_matrix(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], W)
+    return logits, new_cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, index):
+    """One decode step: token [B] int32 at absolute position `index`."""
+    hidden, new_cache, _ = forward(
+        params, cfg, token[:, None], kv_caches=cache, cache_index=index)
+    W = unembed_matrix(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], W)
+    return logits, new_cache

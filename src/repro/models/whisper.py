@@ -1,0 +1,220 @@
+"""Whisper-style encoder-decoder backbone (audio family).
+
+The conv frontend is a STUB per the assignment: inputs are precomputed
+mel-frame embeddings [B, enc_seq, D] (``input_specs`` provides them), so
+this module covers the transformer backbone only: a bidirectional encoder
+and a causal decoder with cross-attention.  Learned positional embeddings,
+LayerNorm (pre-norm), no RoPE - matching the Whisper architecture.
+"""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import BATCH, FSDP, MODEL, constrain
+from repro.models import layers as L
+
+MAX_DECODER_POS = 32768  # sized for the decode_32k assigned shape
+
+
+def init_lm(key, cfg: ArchConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    D, V = cfg.d_model, cfg.vocab
+    ks = jax.random.split(key, 8)
+
+    def enc_layer(k):
+        ka, km = jax.random.split(k)
+        ap, as_ = L.init_attention(ka, cfg, dtype)
+        mp, ms = L.init_mlp(km, D, cfg.d_ff, dtype)
+        return ({"ln1": jnp.ones((D,), dtype), "attn": ap,
+                 "ln2": jnp.ones((D,), dtype), "mlp": mp},
+                {"ln1": (None,), "attn": as_, "ln2": (None,), "mlp": ms})
+
+    def dec_layer(k):
+        ka, kc, km = jax.random.split(k, 3)
+        ap, as_ = L.init_attention(ka, cfg, dtype)
+        cp, cs = L.init_attention(kc, cfg, dtype)
+        mp, ms = L.init_mlp(km, D, cfg.d_ff, dtype)
+        return ({"ln1": jnp.ones((D,), dtype), "attn": ap,
+                 "lnx": jnp.ones((D,), dtype), "cross": cp,
+                 "ln2": jnp.ones((D,), dtype), "mlp": mp},
+                {"ln1": (None,), "attn": as_, "lnx": (None,), "cross": cs,
+                 "ln2": (None,), "mlp": ms})
+
+    enc_keys = jax.random.split(ks[0], cfg.enc_layers)
+    dec_keys = jax.random.split(ks[1], cfg.n_layers)
+    params = {
+        "embed": L._dense_init(ks[2], (V, D), dtype, scale=0.02),
+        "enc_pos": L._dense_init(ks[3], (cfg.enc_seq, D), dtype,
+                                 scale=0.02),
+        "dec_pos": L._dense_init(ks[4], (MAX_DECODER_POS, D), dtype,
+                                 scale=0.02),
+        "enc_layers": jax.vmap(lambda k: enc_layer(k)[0])(enc_keys),
+        "dec_layers": jax.vmap(lambda k: dec_layer(k)[0])(dec_keys),
+        "ln_enc": jnp.ones((D,), dtype),
+        "ln_f": jnp.ones((D,), dtype),
+        "unembed": L._dense_init(ks[5], (D, V), dtype, scale=0.02),
+    }
+    _, es = enc_layer(jax.random.PRNGKey(0))
+    _, ds = dec_layer(jax.random.PRNGKey(0))
+    lift = lambda t: (None,) + t
+    isleaf = lambda t: isinstance(t, tuple)
+    specs = {
+        "embed": (None, MODEL),
+        "enc_pos": (None, None),
+        "dec_pos": (None, None),
+        "enc_layers": jax.tree.map(lift, es, is_leaf=isleaf),
+        "dec_layers": jax.tree.map(lift, ds, is_leaf=isleaf),
+        "ln_enc": (None,),
+        "ln_f": (None,),
+        "unembed": (None, MODEL),
+    }
+    return params, specs
+
+
+def encode(params, cfg: ArchConfig, frames):
+    """frames: [B, enc_seq, D] stub embeddings -> encoder states."""
+    x = frames.astype(jnp.dtype(cfg.param_dtype)) + params["enc_pos"]
+    x = constrain(x, (BATCH, None, None))
+    positions = jnp.arange(x.shape[1])
+
+    def body(x, p):
+        h, _ = L.attention_block(
+            p["attn"], cfg, L.apply_norm(cfg.norm, x, p["ln1"]),
+            positions=positions, causal=False, inv_freqs=None)
+        x = x + h
+        x = x + L.mlp_block(p["mlp"], L.apply_norm(cfg.norm, x, p["ln2"]))
+        return x, None
+
+    body_fn = jax.checkpoint(body) if cfg.remat else body
+    x, _ = jax.lax.scan(body_fn, x, params["enc_layers"])
+    return L.apply_norm(cfg.norm, x, params["ln_enc"])
+
+
+def _cross_attend(p, cfg, x, ck, cv):
+    """Cross-attention against precomputed (cached) encoder k/v."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.kv_heads, cfg.hd
+    q = jnp.einsum("bsd,dh->bsh", x, p["wq"]).reshape(B, S, H, hd)
+    Se = ck.shape[1]
+    if S * Se > 256 * 256:
+        # long prefill: memory-bounded blockwise path
+        o = L.blockwise_attention(q, ck.astype(q.dtype),
+                                  cv.astype(q.dtype), causal=False)
+        o = o.reshape(B, S, H * hd)
+    else:
+        qg = q.reshape(B, S, KV, H // KV, hd)
+        s = jnp.einsum("bqkgh,bpkh->bkgqp", qg, ck,
+                       preferred_element_type=jnp.float32) / math.sqrt(hd)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkgqp,bpkh->bkgqh", pr, cv.astype(jnp.float32))
+        o = o.transpose(0, 3, 1, 2, 4).reshape(
+            B, S, H * hd).astype(x.dtype)
+    return jnp.einsum("bsh,hd->bsd", o, p["wo"])
+
+
+def cross_kv(p, cfg, enc_out):
+    B, Se, D = enc_out.shape
+    KV, hd = cfg.kv_heads, cfg.hd
+    k = jnp.einsum("bsd,dh->bsh", enc_out, p["wk"]).reshape(B, Se, KV, hd)
+    v = jnp.einsum("bsd,dh->bsh", enc_out, p["wv"]).reshape(B, Se, KV, hd)
+    return k, v
+
+
+def decode(params, cfg: ArchConfig, tokens, enc_out, cache=None,
+           cache_index=None):
+    B, S = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cache_index is not None:
+        pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], cache_index,
+                                           S, axis=0)
+        positions = cache_index + jnp.arange(S)
+    else:
+        pos = params["dec_pos"][:S]
+        positions = jnp.arange(S)
+    x = constrain(x + pos, (BATCH, None, None))
+
+    if cache is None:
+        def body(x, p):
+            h, _ = L.attention_block(
+                p["attn"], cfg, L.apply_norm(cfg.norm, x, p["ln1"]),
+                positions=positions, causal=True, inv_freqs=None)
+            x = x + h
+            ck, cv = cross_kv(p["cross"], cfg, enc_out)
+            x = x + _cross_attend(p["cross"], cfg,
+                                  L.apply_norm(cfg.norm, x, p["lnx"]),
+                                  ck, cv)
+            x = x + L.mlp_block(p["mlp"],
+                                L.apply_norm(cfg.norm, x, p["ln2"]))
+            return x, None
+        body_fn = jax.checkpoint(body) if cfg.remat else body
+        x, _ = jax.lax.scan(body_fn, x, params["dec_layers"])
+        new_cache = None
+    else:
+        def body(carry, xs):
+            x = carry
+            p, kv_k, kv_v, ck, cv = xs
+            h, (nk, nv) = L.attention_block(
+                p["attn"], cfg, L.apply_norm(cfg.norm, x, p["ln1"]),
+                positions=positions, causal=True, kv_cache=(kv_k, kv_v),
+                cache_index=cache_index, inv_freqs=None)
+            x = x + h
+            x = x + _cross_attend(p["cross"], cfg,
+                                  L.apply_norm(cfg.norm, x, p["lnx"]),
+                                  ck, cv)
+            x = x + L.mlp_block(p["mlp"],
+                                L.apply_norm(cfg.norm, x, p["ln2"]))
+            return x, (nk, nv)
+        x, (nk, nv) = jax.lax.scan(
+            body, x, (params["dec_layers"], cache["k"], cache["v"],
+                      cache["cross_k"], cache["cross_v"]))
+        new_cache = dict(cache, k=nk, v=nv)
+    x = L.apply_norm(cfg.norm, x, params["ln_f"])
+    return x, new_cache
+
+
+def loss_fn(params, cfg: ArchConfig, batch):
+    from repro.models.transformer import chunked_ce_loss
+    enc_out = encode(params, cfg, batch["frames"])
+    hidden, _ = decode(params, cfg, batch["tokens"], enc_out)
+    return chunked_ce_loss(params, cfg, hidden, batch["labels"])
+
+
+def init_cache(params, cfg: ArchConfig, enc_out, batch: int, max_seq: int):
+    KV, hd = cfg.kv_heads, cfg.hd
+    Ld = cfg.n_layers
+
+    def per_layer_cross(p):
+        return cross_kv(p["cross"], cfg, enc_out)
+
+    ck, cv = jax.vmap(per_layer_cross)(params["dec_layers"])
+    return {
+        "k": jnp.zeros((Ld, batch, max_seq, KV, hd), jnp.bfloat16),
+        "v": jnp.zeros((Ld, batch, max_seq, KV, hd), jnp.bfloat16),
+        "cross_k": ck.astype(jnp.bfloat16),
+        "cross_v": cv.astype(jnp.bfloat16),
+    }
+
+
+def prefill(params, cfg: ArchConfig, tokens, frames):
+    from repro.models.transformer import unembed_matrix
+    B, S = tokens.shape
+    enc_out = encode(params, cfg, frames)
+    hidden, _ = decode(params, cfg, tokens, enc_out)
+    cache = init_cache(params, cfg, enc_out, B, S)
+    W = unembed_matrix(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], W)
+    return logits, cache
+
+
+def decode_step(params, cfg: ArchConfig, cache, token, index):
+    from repro.models.transformer import unembed_matrix
+    hidden, new_cache = decode(params, cfg, token[:, None], None,
+                               cache=cache, cache_index=index)
+    W = unembed_matrix(params, cfg)
+    logits = jnp.einsum("bd,dv->bv", hidden[:, -1], W)
+    return logits, new_cache

@@ -1,0 +1,9 @@
+"""Optimizer substrate: AdamW (fp32 master + moments), LR schedules,
+int8 gradient compression with error feedback."""
+
+from repro.optim.adamw import AdamW, cosine_schedule
+from repro.optim.compression import (compress_gradients,
+                                     compressed_allreduce_specs)
+
+__all__ = ["AdamW", "cosine_schedule", "compress_gradients",
+           "compressed_allreduce_specs"]

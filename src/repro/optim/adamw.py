@@ -1,0 +1,87 @@
+"""AdamW with fp32 master weights and fp32 moments (mixed-precision
+training standard): model params stay bf16 for compute; the optimizer
+carries the precision.  States shard identically to their parameters."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int,
+                    floor: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        frac = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * frac)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    lr: Callable
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+
+    def init(self, params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+            "master": jax.tree.map(
+                lambda p: p.astype(jnp.float32), params),
+        }
+
+    def state_specs(self, param_specs):
+        """Sharding templates mirroring init()'s output."""
+        return {
+            "step": (),
+            "m": param_specs,
+            "v": param_specs,
+            "master": param_specs,
+        }
+
+    def update(self, grads, state, params):
+        step = state["step"] + 1
+        # global-norm clip
+        gsq = sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                  for g in jax.tree.leaves(grads))
+        gnorm = jnp.sqrt(gsq)
+        scale = jnp.minimum(1.0, self.grad_clip / (gnorm + 1e-12))
+        lr = self.lr(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, mw):
+            g = g.astype(jnp.float32) * scale
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            mhat = m / bc1
+            vhat = v / bc2
+            mw = mw - lr * (mhat / (jnp.sqrt(vhat) + self.eps)
+                            + self.weight_decay * mw)
+            return m, v, mw
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"],
+                           state["master"])
+        m = jax.tree.map(lambda t: t[0], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        v = jax.tree.map(lambda t: t[1], out,
+                         is_leaf=lambda t: isinstance(t, tuple))
+        master = jax.tree.map(lambda t: t[2], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+        new_params = jax.tree.map(
+            lambda mw, p: mw.astype(p.dtype), master, params)
+        new_state = {"step": step, "m": m, "v": v, "master": master}
+        return new_params, new_state, {"grad_norm": gnorm, "lr": lr}

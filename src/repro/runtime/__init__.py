@@ -1,0 +1,8 @@
+"""Runtime fault-tolerance: supervised training, stragglers, elasticity."""
+
+from repro.runtime.fault_tolerance import (StepTimer, TrainSupervisor,
+                                           StragglerMonitor)
+from repro.runtime.elastic import choose_mesh_shape
+
+__all__ = ["StepTimer", "TrainSupervisor", "StragglerMonitor",
+           "choose_mesh_shape"]

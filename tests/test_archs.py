@@ -1,0 +1,115 @@
+"""Per-architecture smoke tests: reduced same-family configs, one forward
+/ train / decode step on CPU, asserting shapes and finiteness."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.base import ShapeCell
+from repro.models.api import build
+
+TRAIN = ShapeCell("smoke-train", "train", 64, 2)
+PREFILL = ShapeCell("smoke-prefill", "prefill", 64, 2)
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.fixture(scope="module", params=ARCH_IDS)
+def arch_setup(request):
+    cfg = get_config(request.param, smoke=True)
+    api = build(cfg)
+    params, specs = api.init(KEY)
+    return request.param, cfg, api, params, specs
+
+
+def test_param_specs_mirror_params(arch_setup):
+    _, _, _, params, specs = arch_setup
+    pleaves = jax.tree.leaves(params)
+    sleaves = jax.tree.leaves(
+        specs, is_leaf=lambda t: isinstance(t, tuple) and not any(
+            isinstance(x, dict) for x in t))
+    assert len(pleaves) == len(sleaves)
+    for p, s in zip(pleaves, sleaves):
+        assert len(s) == p.ndim, f"spec {s} vs shape {p.shape}"
+
+
+def test_train_loss_finite(arch_setup):
+    arch, cfg, api, params, _ = arch_setup
+    batch = api.make_batch(KEY, TRAIN)
+    loss = jax.jit(api.loss)(params, batch)
+    assert loss.shape == ()
+    assert np.isfinite(float(loss)), f"{arch} loss not finite"
+    # untrained loss should be near ln(vocab)
+    assert abs(float(loss) - np.log(cfg.vocab)) < 1.5
+
+
+def test_grads_finite_and_nonzero(arch_setup):
+    arch, cfg, api, params, _ = arch_setup
+    batch = api.make_batch(KEY, TRAIN)
+    g = jax.jit(jax.grad(api.loss))(params, batch)
+    leaves = jax.tree.leaves(g)
+    assert all(np.isfinite(np.asarray(x, np.float32)).all()
+               for x in leaves), f"{arch} has non-finite grads"
+    total = sum(float(jnp.sum(jnp.abs(x.astype(jnp.float32))))
+                for x in leaves)
+    assert total > 0, f"{arch} grads all zero"
+
+
+def test_prefill_then_decode(arch_setup):
+    arch, cfg, api, params, _ = arch_setup
+    batch = api.make_batch(KEY, PREFILL)
+    logits, cache = jax.jit(api.prefill)(params, batch)
+    assert logits.shape == (PREFILL.global_batch, cfg.vocab)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    logits2, cache2 = jax.jit(api.decode)(
+        params, cache, tok, jnp.int32(PREFILL.seq_len - 1))
+    assert logits2.shape == (PREFILL.global_batch, cfg.vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+    # cache structure is stable across steps (jit-compatible loop)
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+def test_decode_matches_forward_logits():
+    """Teacher-forced decode must reproduce the prefill's distribution:
+    decoding token t with the cache equals a fresh prefill of t+1 tokens."""
+    cfg = get_config("tinyllama_1_1b", smoke=True)
+    api = build(cfg)
+    params, _ = api.init(KEY)
+    toks = jax.random.randint(KEY, (1, 16), 0, cfg.vocab, dtype=jnp.int32)
+
+    logits_full, _ = api.prefill(params, {"tokens": toks})
+
+    # prefill on the first 15 tokens with headroom for one decode step
+    logits_p, cache = api.prefill(
+        params, {"tokens": jnp.pad(toks[:, :15], ((0, 0), (0, 1)))})
+    # note: padded prefill writes a zero token at position 15, so instead
+    # decode from a 15-token prefill cache re-built at size 16
+    from repro.models import transformer as T
+    hidden, kv, _ = T.forward(
+        params, cfg, toks[:, :15],
+        kv_caches=T.init_kv_cache(cfg, 1, 16), cache_index=jnp.int32(0))
+    logits_d, _ = T.decode_step(params, cfg, kv, toks[:, 15],
+                                jnp.int32(15))
+    np.testing.assert_allclose(
+        np.asarray(logits_d, np.float32),
+        np.asarray(logits_full, np.float32), atol=3e-2, rtol=3e-2)
+
+
+@pytest.mark.parametrize("arch", ["zamba2_2_7b", "mamba2_130m"])
+def test_subquadratic_archs_run_long_context(arch):
+    """The two long_500k-eligible archs decode beyond their train length
+    with O(1)/O(G) state."""
+    cfg = get_config(arch, smoke=True)
+    api = build(cfg)
+    params, _ = api.init(KEY)
+    B = 2
+    if arch == "mamba2_130m":
+        from repro.models import mamba2 as M
+        cache = M.init_ssm_cache(cfg, cfg.n_layers, B)
+    else:
+        from repro.models import hybrid as H
+        cache = H.init_cache(cfg, B, 256)
+    tok = jnp.zeros((B,), jnp.int32)
+    logits, cache = jax.jit(api.decode)(params, cache, tok, jnp.int32(200))
+    assert np.isfinite(np.asarray(logits, np.float32)).all()

@@ -1,0 +1,158 @@
+"""Unit + property tests for the GainSight core: lifetime extraction,
+Algorithm-1 frontend, composer, PKA, orphans."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM, SRAM,
+                        analyze_trace, compose, compute_stats,
+                        energy_ratio_vs_sram, lifetimes_of_trace,
+                        make_trace, orphaned_access_fraction,
+                        select_kernels, short_lived_fraction)
+
+
+def test_single_lifetime():
+    tr = make_trace([0, 10, 20], [7, 7, 7], [True, False, False])
+    st_ = lifetimes_of_trace(tr)
+    v = np.asarray(st_.valid)
+    assert v.sum() == 1
+    assert np.asarray(st_.lifetime_cycles)[v][0] == 20
+    assert not np.asarray(st_.orphan)[v][0]
+
+
+def test_overwrite_splits_lifetimes():
+    tr = make_trace([0, 10, 20, 30], [1, 1, 1, 1],
+                    [True, False, True, False])
+    st_ = lifetimes_of_trace(tr)
+    v = np.asarray(st_.valid)
+    lts = sorted(np.asarray(st_.lifetime_cycles)[v].tolist())
+    assert lts == [10, 10]
+
+
+def test_orphan_detection():
+    tr = make_trace([0, 5], [1, 2], [True, True])
+    st_ = lifetimes_of_trace(tr)
+    v = np.asarray(st_.valid)
+    assert np.asarray(st_.orphan)[v].all()
+
+
+def test_cache_mode_miss_starts_lifetime():
+    # read miss -> starts lifetime; hit extends; next miss closes
+    tr = make_trace([0, 10, 20], [3, 3, 3],
+                    [False, False, False],
+                    hit=[False, True, False])
+    st_ = lifetimes_of_trace(tr, mode="cache")
+    v = np.asarray(st_.valid)
+    lts = np.asarray(st_.lifetime_cycles)[v]
+    assert 10 in lts.tolist()
+
+
+def test_no_write_allocate_drops_write_miss_segments():
+    tr = make_trace([0, 10], [4, 4], [True, False],
+                    hit=[False, True])
+    wa = lifetimes_of_trace(tr, mode="cache", write_allocate=True)
+    nwa = lifetimes_of_trace(tr, mode="cache", write_allocate=False)
+    assert np.asarray(wa.valid).sum() > np.asarray(nwa.valid).sum()
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.data())
+def test_lifetime_invariants(data):
+    n = data.draw(st.integers(4, 120))
+    rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 16)))
+    t = np.sort(rng.randint(0, 1000, n))
+    a = rng.randint(0, 8, n)
+    w = rng.rand(n) < 0.4
+    tr = make_trace(t, a, w)
+    st_ = lifetimes_of_trace(tr)
+    v = np.asarray(st_.valid)
+    lt = np.asarray(st_.lifetime_cycles)[v]
+    nr = np.asarray(st_.n_reads)[v]
+    orphan = np.asarray(st_.orphan)[v]
+    # invariant 1: lifetimes are nonnegative and bounded by the span
+    assert (lt >= 0).all()
+    assert lt.max(initial=0) <= t.max() - t.min()
+    # invariant 2: orphans have zero reads; non-orphans at least one
+    assert (nr[orphan] == 0).all()
+    assert (nr[~orphan] > 0).all()
+    # invariant 3: every write starts exactly one lifetime, plus one
+    # extra segment per address whose first event is a read
+    read_first = 0
+    for addr in np.unique(a):
+        m = a == addr
+        order = np.argsort(t[m], kind="stable")
+        read_first += int(not w[m][order][0])
+    assert v.sum() == w.sum() + read_first
+    # invariant 4: total reads conserved
+    assert nr.sum() == (~w).sum()
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_energy_monotone_in_retention(seed):
+    rng = np.random.RandomState(seed)
+    n = 200
+    t = np.sort(rng.randint(0, 100000, n))
+    a = rng.randint(0, 16, n)
+    w = rng.rand(n) < 0.3
+    tr = make_trace(t, a, w)
+    stats = compute_stats(tr, 0)
+    # refresh-free device energy ratio must equal the per-bit ratio
+    rep = analyze_trace(tr)
+    ratio = energy_ratio_vs_sram(rep, "mem", "Si-GCRAM")
+    # with refreshes the ratio can only grow above the raw 0.3323
+    assert ratio >= 0.3323 - 1e-9
+
+
+def test_composer_prefers_cheapest_fitting_device():
+    # all lifetimes fit Si-GCRAM -> 100% Si-GCRAM, energy ratio 0.3323
+    tr = make_trace([0, 100, 200, 300], [1, 1, 2, 2],
+                    [True, False, True, False])
+    stats = compute_stats(tr, 0)
+    raw = lifetimes_of_trace(tr)
+    comp = compose(stats, raw=raw, clock_hz=tr.clock_hz)
+    assert comp.devices[0] == "Si-GCRAM"
+    assert comp.capacity_fractions[0] == pytest.approx(1.0)
+    assert comp.energy_vs_sram == pytest.approx(0.3323, rel=1e-3)
+
+
+def test_composer_long_lifetimes_fall_back_to_sram():
+    # lifetime of 1 second >> any GCRAM retention at 1 GHz
+    tr = make_trace([0, 1_000_000_000], [1, 1], [True, False])
+    stats = compute_stats(tr, 0)
+    raw = lifetimes_of_trace(tr)
+    comp = compose(stats, raw=raw, clock_hz=tr.clock_hz)
+    frac = dict(zip(comp.devices, comp.capacity_fractions))
+    assert frac["SRAM"] == pytest.approx(1.0)
+
+
+def test_hybrid_retention_degrades_with_write_freq():
+    assert HYBRID_GCRAM.retention_at(1e6) == pytest.approx(1e-5)
+    assert HYBRID_GCRAM.retention_at(1e8) < HYBRID_GCRAM.retention_at(1e6)
+    assert SI_GCRAM.retention_at(1e8) == SI_GCRAM.retention_at(1e2)
+
+
+def test_short_lived_fraction_weighting():
+    tr = make_trace([0, 1, 2, 3, 0, 2000], [1, 1, 1, 1, 2, 2],
+                    [True, False, False, False, True, False])
+    st_ = lifetimes_of_trace(tr)
+    by_access = short_lived_fraction(st_, 1e9, 1e-6)
+    by_lifetime = short_lived_fraction(st_, 1e9, 1e-6,
+                                       weight_by_accesses=False)
+    assert by_access > by_lifetime  # the short lifetime has more accesses
+
+
+def test_pka_selects_representatives():
+    rng = np.random.RandomState(0)
+    # two clear kernel families
+    fa = rng.randn(20, 6) + np.array([10, 0, 0, 0, 0, 0])
+    fb = rng.randn(20, 6) + np.array([0, 10, 0, 0, 0, 0])
+    feats = np.concatenate([fa, fb])
+    runtimes = np.ones(40)
+    target = np.concatenate([np.full(20, 100.0), np.full(20, 1.0)])
+    res = select_kernels(feats, runtimes, target, tol=0.1)
+    assert res.k >= 2
+    assert res.speedup > 2
+    est = (target[res.representatives] * res.weights).sum()
+    assert est == pytest.approx(target.sum(), rel=0.15)

