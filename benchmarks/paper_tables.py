@@ -1,7 +1,9 @@
 """One benchmark per paper table/figure (deliverable d).
 
 Each function returns a list of CSV rows ("name,us_per_call,derived") plus
-a human-readable table printed to stdout.
+a human-readable table printed to stdout.  Analysis pipelines run through
+the :class:`repro.core.ProfileSession` facade; only kernel-sliced studies
+(Table 4's PKA attribution) still touch the frontend primitives directly.
 """
 
 from __future__ import annotations
@@ -10,16 +12,14 @@ import time
 
 import numpy as np
 
-from benchmarks.workloads import WORKLOADS, build_stream, gpu_trace
+from benchmarks.workloads import gpu_trace
 from repro.backends.systolic import (FILTER, IFMAP, OFMAP, GemmLayer,
-                                     SystolicConfig, conv_as_gemm,
-                                     simulate)
-from repro.core import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM, SRAM,
-                        analyze_trace, compose, compute_stats,
-                        device_report, energy_ratio_vs_sram,
-                        lifetime_histogram, lifetimes_of_trace,
-                        orphaned_access_fraction, select_kernels,
-                        short_lived_fraction)
+                                     SUB_NAMES, SystolicConfig,
+                                     conv_as_gemm, simulate)
+from repro.core import (HYBRID_GCRAM, SI_GCRAM, SRAM, ProfileSession,
+                        compute_stats, device_report,
+                        energy_ratio_vs_sram, orphaned_access_fraction,
+                        select_kernels)
 
 GPU_WORKLOADS = ("bert-base-uncased", "gpt-j-6b", "llama-3.2-1b",
                  "llama-3-8b", "resnet-18", "resnet-50",
@@ -138,7 +138,7 @@ def table6_energy():
     l1_si, l2_si = [], []
     for name in GPU_WORKLOADS:
         (trace, _), us = _timeit(lambda n=name: gpu_trace(n))
-        rep = analyze_trace(trace, mode="cache")
+        rep = ProfileSession.from_trace(trace, mode="cache").report()
         vals = []
         for sub in ("L1", "L2"):
             for dev in ("Si-GCRAM", "Hybrid-GCRAM"):
@@ -167,12 +167,12 @@ def table7_hetero():
           f"{'L2 composition':>24s} {'L2 E%':>6s} {'vs monoSi':>9s}")
     for name in GPU_WORKLOADS:
         (trace, _), us = _timeit(lambda n=name: gpu_trace(n))
+        session = ProfileSession.from_trace(trace, mode="cache")
+        session.analyze().compose()
         cols = []
         gain_mono = 0.0
-        for sub in (0, 1):
-            st = compute_stats(trace, sub, mode="cache")
-            raw = lifetimes_of_trace(trace.select(sub), mode="cache")
-            comp = compose(st, raw=raw, clock_hz=trace.clock_hz)
+        for sub_name in ("L1", "L2"):
+            comp = session.composition(sub_name)
             frac = dict(zip(comp.devices, comp.capacity_fractions))
             cols.append((
                 f"{100 * frac.get('Si-GCRAM', 0):.1f}/"
@@ -233,12 +233,13 @@ def table9_pe_size():
                                                "ofmap")))
     for pe in (32, 64, 128, 256):
         t0 = time.monotonic()
-        cfg = SystolicConfig(rows=pe, cols=pe, dataflow="ws")
-        trace, _ = simulate(RESNET50_GEMMS, cfg)
+        session = ProfileSession("systolic")
+        session.profile(RESNET50_GEMMS, rows=pe, cols=pe, dataflow="ws")
+        session.analyze()
         cells = []
         derived = []
         for sub in (IFMAP, FILTER, OFMAP):
-            st = compute_stats(trace, sub, mode="scratchpad")
+            st, _ = session.subpartition_stats(SUB_NAMES[sub])
             lt = st.lifetimes_s
             avg = lt.mean() * 1e6 if len(lt) else 0
             mx = lt.max() * 1e6 if len(lt) else 0
@@ -281,15 +282,16 @@ def fig8_lifetimes():
     agg = {k: [] for k in ("l1si", "l1hy", "l2si", "l2hy")}
     for name in GPU_WORKLOADS:
         (trace, _), us = _timeit(lambda n=name: gpu_trace(n))
+        session = ProfileSession.from_trace(trace, mode="cache")
+        session.analyze()
         vals = {}
-        for sub, tag in ((0, "l1"), (1, "l2")):
-            raw = lifetimes_of_trace(trace.select(sub), mode="cache")
-            vals[tag + "si"] = 100 * short_lived_fraction(
-                raw, trace.clock_hz, SI_GCRAM.retention_s)
-            vals[tag + "hy"] = 100 * short_lived_fraction(
-                raw, trace.clock_hz, HYBRID_GCRAM.retention_s)
+        for sub_name, tag in (("L1", "l1"), ("L2", "l2")):
+            vals[tag + "si"] = 100 * session.short_lived_fraction(
+                sub_name, SI_GCRAM.retention_s)
+            vals[tag + "hy"] = 100 * session.short_lived_fraction(
+                sub_name, HYBRID_GCRAM.retention_s)
             if tag == "l1":
-                st = compute_stats(trace, 0, mode="cache")
+                st, _ = session.subpartition_stats("L1")
                 mx = st.lifetimes_s.max() * 1e6 if len(
                     st.lifetimes_s) else 0
         for k in agg:
@@ -322,15 +324,15 @@ def fig10_dataflow():
     fracs = []
     for df in ("is", "ws", "os"):
         t0 = time.monotonic()
-        cfg = SystolicConfig(rows=256, cols=256, dataflow=df)
-        trace, _ = simulate(RESNET50_GEMMS, cfg)
+        session = ProfileSession("systolic")
+        session.profile(RESNET50_GEMMS, rows=256, cols=256, dataflow=df)
+        session.analyze()
         us = (time.monotonic() - t0) * 1e6
         for sub, name in ((IFMAP, "ifmap"), (FILTER, "filter"),
                           (OFMAP, "ofmap")):
-            raw = lifetimes_of_trace(trace.select(sub), mode="scratchpad")
-            st = compute_stats(trace, sub, mode="scratchpad")
-            f = 100 * short_lived_fraction(raw, trace.clock_hz,
-                                           SI_GCRAM.retention_s)
+            st, _ = session.subpartition_stats(name)
+            f = 100 * session.short_lived_fraction(
+                name, SI_GCRAM.retention_s)
             lt = st.lifetimes_s
             fracs.append(f)
             print(f"{df:>9s} {name:>8s} {f:12.1f} "

@@ -2,18 +2,45 @@
 
 Prints ``name,us_per_call,derived`` CSV (plus human-readable tables).
 Usage: ``PYTHONPATH=src python -m benchmarks.run [--only NAME]``.
+
+All analysis benchmarks drive the :class:`repro.core.ProfileSession`
+pipeline; ``pipeline`` additionally times the facade itself, monolithic
+vs chunk-streamed through ``TraceAccumulator``.
 """
 
 from __future__ import annotations
 
 import argparse
+import time
+
+
+def pipeline_bench():
+    """ProfileSession end-to-end: monolithic vs streaming frontend."""
+    from repro.backends.systolic import GemmLayer
+    from repro.core import ProfileSession, available_backends
+
+    rows = []
+    print("\n=== ProfileSession pipeline (backends: "
+          f"{', '.join(available_backends())}) ===")
+    layers = [GemmLayer("g0", 96, 128, 128), GemmLayer("g1", 64, 96, 192)]
+    for label, cfg in (("monolithic", {}),
+                       ("streamed-8k", {"chunk_events": 8192})):
+        t0 = time.monotonic()
+        report = ProfileSession("systolic").run(
+            layers, rows=64, cols=64, dataflow="ws", **cfg)
+        us = (time.monotonic() - t0) * 1e6
+        n_lt = sum(v["n_lifetimes"]
+                   for v in report["subpartitions"].values())
+        print(f"{label:14s} {us / 1e3:8.1f} ms  lifetimes={n_lt}")
+        rows.append(f"pipeline.{label},{us:.1f},lifetimes={n_lt}")
+    return rows
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table4|table6|table7|table8|table9|fig8|fig10|"
-                         "kernels")
+                         "kernels|pipeline")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as pt
@@ -21,6 +48,7 @@ def main() -> None:
     from benchmarks.kernels_bench import kernels_bench
 
     benches = {
+        "pipeline": pipeline_bench,
         "table4": pt.table4_pka,
         "fig5": fig5_retention,
         "table6": pt.table6_energy,

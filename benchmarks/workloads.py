@@ -9,9 +9,9 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.backends.cachesim import HierarchyConfig, simulate_hierarchy
 from repro.backends.opstream import (StreamBuilder, polybench_conv_ops,
                                      resnet_ops, transformer_ops)
+from repro.core import get_backend
 
 # name -> (builder fn, sample factor)
 _REGISTRY = {}
@@ -104,10 +104,12 @@ _trace_cache: dict = {}
 
 
 def gpu_trace(name: str, write_allocate: bool = True):
-    """L1/L2 trace for a workload (memoized per policy)."""
+    """L1/L2 trace for a workload via the cachesim registry backend
+    (memoized per policy)."""
     key = (name, write_allocate)
     if key not in _trace_cache:
-        (t, a, w), kernels = build_stream(name)
-        cfg = HierarchyConfig(write_allocate=write_allocate)
-        _trace_cache[key] = (simulate_hierarchy(t, a, w, cfg), kernels)
+        fn, sample = _REGISTRY[name]
+        res = get_backend("cachesim").run(
+            fn, sample=sample, write_allocate=write_allocate)
+        _trace_cache[key] = (res.trace, res.kernels)
     return _trace_cache[key]

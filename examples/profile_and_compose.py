@@ -1,9 +1,11 @@
 """Profile-guided memory composition across backends (the paper's §3.1
 usage scenario, driven by the framework's own model configs).
 
-Profiles tinyllama's op stream through the GPU-like L1/L2 hierarchy under
-both write-allocation policies, then the TPU jaxpr backend, and prints the
-heterogeneous composition each would want.
+Profiles tinyllama's op stream through the GPU-like L1/L2 hierarchy, then
+the systolic array (streamed chunk-by-chunk through the bounded-memory
+accumulator), then the TPU jaxpr backend, and prints the heterogeneous
+composition each would want.  Every pipeline goes through the same
+``python -m repro profile`` front door / ProfileSession facade.
 
   PYTHONPATH=src python examples/profile_and_compose.py
 """
@@ -17,10 +19,12 @@ main(["--arch", "tinyllama_1_1b", "--backend", "gpu", "--seq", "96"])
 
 print()
 print("=" * 70)
-print("Systolic-array backend (output-stationary, 128x128):")
+print("Systolic-array backend (output-stationary, 128x128), streaming")
+print("the trace through TraceAccumulator in 50k-event chunks:")
 print("=" * 70)
 main(["--arch", "tinyllama_1_1b", "--backend", "systolic",
-      "--dataflow", "os", "--pe", "128", "--seq", "96"])
+      "--dataflow", "os", "--pe", "128", "--seq", "96",
+      "--chunk-events", "50000"])
 
 print()
 print("=" * 70)

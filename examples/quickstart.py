@@ -1,4 +1,4 @@
-"""Quickstart: GainSight in 40 lines.
+"""Quickstart: GainSight in 40 lines, through the ProfileSession front door.
 
 Profile a transformer's GEMMs on a simulated 128x128 systolic array,
 extract data lifetimes, project SRAM / Si-GCRAM / Hybrid-GCRAM energy and
@@ -7,10 +7,8 @@ area, and derive the optimal heterogeneous memory composition.
   PYTHONPATH=src python examples/quickstart.py
 """
 
-from repro.backends.systolic import GemmLayer, SystolicConfig, simulate
-from repro.core import (HYBRID_GCRAM, SI_GCRAM, SRAM, compose,
-                        compute_stats, device_report, lifetimes_of_trace,
-                        short_lived_fraction)
+from repro.backends.systolic import GemmLayer
+from repro.core import SI_GCRAM, ProfileSession
 
 # 1. a workload: the GEMMs of one transformer block (BERT-base dims)
 layers = [
@@ -22,29 +20,33 @@ layers = [
     GemmLayer("ffn_down", 128, 768, 3072),
 ]
 
-# 2. run it on the systolic-array backend (weight-stationary dataflow)
-cfg = SystolicConfig(rows=128, cols=128, dataflow="ws")
-trace, kernel_stats = simulate(layers, cfg)
+# 2. one session = the whole paper workflow: the "systolic" registry
+#    backend (weight-stationary dataflow), the Algorithm-1 frontend, and
+#    the Table-7 composer, chained behind a single facade
+session = ProfileSession("systolic")
+session.profile(layers, rows=128, cols=128, dataflow="ws")
+session.analyze().compose()
+
+trace = session.trace
 print(f"trace: {trace.n_events} events over {trace.duration_s * 1e6:.1f} us")
 
-# 3. analyze each scratchpad buffer
-for sub, name in enumerate(("ifmap", "filter", "ofmap")):
-    stats = compute_stats(trace, sub, mode="scratchpad")
-    raw = lifetimes_of_trace(trace.select(sub), mode="scratchpad")
-    frac = short_lived_fraction(raw, cfg.clock_hz, SI_GCRAM.retention_s)
+# 3. walk the per-buffer report: lifetimes, device projections, composition
+report = session.report()
+for name, entry in report["subpartitions"].items():
+    stats, _raw = session.subpartition_stats(name)
+    frac = session.short_lived_fraction(name, SI_GCRAM.retention_s)
 
     print(f"\n--- {name} buffer ---")
-    print(f"  lifetimes: n={len(stats.lifetimes_s)} "
-          f"mean={stats.lifetimes_s.mean() * 1e6:.3f}us "
-          f"max={stats.lifetimes_s.max() * 1e6:.2f}us")
+    print(f"  lifetimes: n={entry['n_lifetimes']} "
+          f"mean={entry['mean_lifetime_s'] * 1e6:.3f}us "
+          f"max={entry['max_lifetime_s'] * 1e6:.2f}us")
     print(f"  short-lived vs Si-GCRAM 1us retention: {100 * frac:.1f}%")
 
-    # 4. project each memory device (Algorithm 1)
-    for dev in (SRAM, SI_GCRAM, HYBRID_GCRAM):
-        r = device_report(stats, dev)
-        print(f"  {dev.name:14s} E={r.active_energy_j:.3e} J "
-              f"area={r.area_mm2:.4f} mm^2 refreshes={r.refresh_bits:.0f}")
+    # 4. each memory device's Algorithm-1 projection
+    for dev, r in entry["devices"].items():
+        print(f"  {dev:14s} E={r['active_energy_j']:.3e} J "
+              f"area={r['area_mm2']:.4f} mm^2 "
+              f"refreshes={r['refresh_bits']:.0f}")
 
     # 5. optimal heterogeneous composition (Table 7 logic)
-    comp = compose(stats, raw=raw, clock_hz=cfg.clock_hz)
-    print(f"  composition: {comp.summary()}")
+    print(f"  composition: {session.composition(name).summary()}")

@@ -1,0 +1,49 @@
+"""``python -m repro``: the GainSight command-line front door.
+
+Subcommands:
+
+  profile    run a workload on a registry backend, analyze lifetimes, and
+             emit the heterogeneous-memory report (see
+             ``repro.launch.profile`` for flags; ``--dry-run`` runs a tiny
+             built-in workload as a pipeline smoke test)
+  backends   list the registered profiling backends
+
+Examples::
+
+  PYTHONPATH=src python -m repro profile --backend systolic \
+      --arch tinyllama_1_1b --dataflow ws --pe 128
+  PYTHONPATH=src python -m repro profile --backend systolic --dry-run
+  PYTHONPATH=src python -m repro backends
+"""
+
+from __future__ import annotations
+
+import sys
+
+_USAGE = __doc__
+
+
+def main(argv=None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    if not argv or argv[0] in ("-h", "--help", "help"):
+        print(_USAGE)
+        return 0
+    cmd, rest = argv[0], argv[1:]
+    if cmd == "profile":
+        from repro.launch.profile import main as profile_main
+        profile_main(rest)
+        return 0
+    if cmd == "backends":
+        from repro.core import available_backends, get_backend
+        for name in available_backends():
+            b = get_backend(name)
+            doc = (b.__doc__ or "").strip().splitlines()
+            print(f"{name:12s} mode={b.mode:10s} "
+                  f"{doc[0] if doc else ''}")
+        return 0
+    print(f"unknown command {cmd!r}\n\n{_USAGE}", file=sys.stderr)
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,13 +1,27 @@
 """Retargetable hardware backends (paper §5).
 
 Each backend executes (or models the execution of) a workload on a target
-architecture and emits the canonical trace format of ``repro.core.trace``:
+architecture and emits the canonical trace format of ``repro.core.trace``.
+All of them self-register with the ``repro.core.api`` backend registry, so
+the supported front door is::
+
+    from repro.core import ProfileSession, get_backend
+
+    get_backend("systolic")          # or "cachesim"/"gpu",
+                                     #    "opstream", "tpu_graph"/"tpu"
+    ProfileSession("systolic").run(workload, rows=128, cols=128)
+
+(the CLI equivalent is ``python -m repro profile --backend systolic ...``;
+see ``docs/API.md`` for the full Backend protocol and session lifecycle).
+
+Built-in backends:
 
   systolic   - SCALE-Sim-style systolic array with is/ws/os dataflows (§5.2)
-  cachesim   - set-associative L1/L2 data caches, write-allocate ablation (§5.1)
+  cachesim   - set-associative L1/L2 data caches, write-allocate ablation
+               (§5.1); registry alias "gpu"
   opstream   - operator-level address-stream generation from model op graphs
                (replaces SASS capture; see DESIGN.md §3)
   tpu_graph  - TPU backend: HBM<->VMEM buffer traces from jaxprs of the
                framework's own compiled model steps ("bring your own
-               hardware backend", §5.3)
+               hardware backend", §5.3); registry alias "tpu"
 """

@@ -26,7 +26,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.trace import Trace
+from repro.core.api import ProfileResult, register_backend
+from repro.core.trace import Trace, chunk_trace
 
 L1, L2 = 0, 1
 SUB_NAMES = ("L1", "L2")
@@ -154,3 +155,43 @@ def simulate_hierarchy(
         hit=hits[order], subpartition=subs[order],
         clock_hz=cfg.clock_hz, block_bits=cfg.l1.line_bytes * 8,
         names=SUB_NAMES)
+
+
+@register_backend("cachesim", aliases=("gpu",))
+class CacheHierarchyBackend:
+    """Registry adapter for the L1/L2 cache hierarchy (alias: "gpu").
+
+    Workload forms:
+      - ``(time_cycles, byte_addr, is_write)`` arrays to replay directly,
+      - a filled ``opstream.StreamBuilder`` (anything with ``.finish()``),
+      - a callable op program ``fn(sb)`` lowered onto a fresh builder
+        (``sample=`` controls its line sampling).
+
+    Config kwargs are the :class:`HierarchyConfig` fields (or pass
+    ``config=HierarchyConfig(...)``).  ``chunk_events=N`` streams the
+    hit-annotated trace to the frontend in N-event chunks.
+    """
+    name = "cachesim"
+    mode = "cache"
+
+    def run(self, workload, *, config: HierarchyConfig | None = None,
+            sample: int = 1, chunk_events: int | None = None,
+            **cfg) -> ProfileResult:
+        kernels = []
+        if hasattr(workload, "finish"):
+            t, a, w = workload.finish()
+            kernels = [k.__dict__ for k in workload.kernels]
+        elif callable(workload):
+            from repro.backends.opstream import StreamBuilder
+            sb = StreamBuilder(sample=sample)
+            workload(sb)
+            t, a, w = sb.finish()
+            kernels = [k.__dict__ for k in sb.kernels]
+        else:
+            t, a, w = workload
+        hcfg = config if config is not None else HierarchyConfig(**cfg)
+        trace = simulate_hierarchy(t, a, w, hcfg)
+        if chunk_events:
+            return ProfileResult(chunks=chunk_trace(trace, chunk_events),
+                                 kernels=kernels, mode=self.mode)
+        return ProfileResult(trace=trace, kernels=kernels, mode=self.mode)

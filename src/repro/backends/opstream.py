@@ -25,6 +25,9 @@ import math
 
 import numpy as np
 
+from repro.core.api import ProfileResult, register_backend
+from repro.core.trace import Trace, chunk_trace
+
 LINE_BYTES = 128
 FLOPS_PER_CYCLE = 1.0e5          # ~100 TFLOP/s at 1 GHz
 BYTES_PER_CYCLE = 2000.0         # ~2 TB/s at 1 GHz
@@ -222,6 +225,44 @@ class StreamBuilder:
 def _round_line(nbytes: int) -> int:
     return max(LINE_BYTES,
                ((nbytes + LINE_BYTES - 1) // LINE_BYTES) * LINE_BYTES)
+
+
+@register_backend("opstream")
+class OpStreamBackend:
+    """Registry adapter exposing the raw operator address stream.
+
+    Workload: a callable op program ``fn(sb: StreamBuilder)`` or a filled
+    builder.  The result is the line-granular DRAM-side stream *before*
+    any cache model (every access "hits"), analyzed scratchpad-mode -
+    useful for footprint/reuse studies; feed the same workload to the
+    ``cachesim`` backend for hit/miss-annotated L1/L2 traces.
+    """
+    name = "opstream"
+    mode = "scratchpad"
+
+    def run(self, workload, *, sample: int = 1, seed: int = 0,
+            clock_hz: float = 1.0e9,
+            chunk_events: int | None = None) -> ProfileResult:
+        if hasattr(workload, "finish"):
+            sb = workload
+        elif callable(workload):
+            sb = StreamBuilder(sample=sample, seed=seed)
+            workload(sb)
+        else:
+            raise TypeError("opstream workload must be a StreamBuilder or "
+                            "a callable op program fn(sb)")
+        t, a, w = sb.finish()
+        trace = Trace(
+            time_cycles=t, addr=a // LINE_BYTES, is_write=w,
+            hit=np.ones(len(t), bool),
+            subpartition=np.zeros(len(t), np.int32),
+            clock_hz=clock_hz, block_bits=LINE_BYTES * 8,
+            names=("stream",))
+        kernels = [k.__dict__ for k in sb.kernels]
+        if chunk_events:
+            return ProfileResult(chunks=chunk_trace(trace, chunk_events),
+                                 kernels=kernels, mode=self.mode)
+        return ProfileResult(trace=trace, kernels=kernels, mode=self.mode)
 
 
 # --------------------------------------------------------------------------

@@ -38,7 +38,8 @@ from typing import Sequence
 
 import numpy as np
 
-from repro.core.trace import Trace
+from repro.core.api import ProfileResult, register_backend
+from repro.core.trace import Trace, chunk_trace
 
 IFMAP, FILTER, OFMAP = 0, 1, 2
 SUB_NAMES = ("ifmap", "filter", "ofmap")
@@ -265,3 +266,25 @@ def simulate(layers: Sequence[GemmLayer],
             "flops": 2 * layer.M * layer.N * layer.K,
         })
     return b.build(cfg), kstats
+
+
+@register_backend("systolic")
+class SystolicBackend:
+    """Registry adapter for the systolic-array simulator.
+
+    Workload: a sequence of :class:`GemmLayer`.  Config kwargs are the
+    :class:`SystolicConfig` fields (or pass ``config=SystolicConfig(...)``
+    directly).  ``chunk_events=N`` streams the trace to the frontend in
+    N-event chunks instead of one flat array.
+    """
+    name = "systolic"
+    mode = "scratchpad"
+
+    def run(self, workload, *, config: SystolicConfig | None = None,
+            chunk_events: int | None = None, **cfg) -> ProfileResult:
+        scfg = config if config is not None else SystolicConfig(**cfg)
+        trace, kstats = simulate(list(workload), scfg)
+        if chunk_events:
+            return ProfileResult(chunks=chunk_trace(trace, chunk_events),
+                                 kernels=kstats, mode=self.mode)
+        return ProfileResult(trace=trace, kernels=kstats, mode=self.mode)

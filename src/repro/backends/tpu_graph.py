@@ -26,7 +26,8 @@ import math
 import jax
 import numpy as np
 
-from repro.core.trace import Trace
+from repro.core.api import ProfileResult, register_backend
+from repro.core.trace import Trace, chunk_trace
 
 PEAK_FLOPS = 197e12
 HBM_BW = 819e9
@@ -167,3 +168,35 @@ def trace_jaxpr(
         subpartition=np.zeros(len(t), np.int32),
         clock_hz=clock_hz, block_bits=BLOCK_BYTES * 8, names=("VMEM",))
     return tr, ops
+
+
+@register_backend("tpu_graph", aliases=("tpu",))
+class TpuGraphBackend:
+    """Registry adapter for the jaxpr-walking TPU backend (alias: "tpu").
+
+    Workload: a traceable function, or a ``(fn, *example_args)`` tuple
+    whose args are ShapeDtypeStructs/arrays.  Config kwargs go straight to
+    :func:`trace_jaxpr` (``clock_hz``, ``sample``, ``max_blocks_per_buffer``,
+    ``scan_unroll_cap``).
+    """
+    name = "tpu_graph"
+    mode = "scratchpad"
+
+    def run(self, workload, *, chunk_events: int | None = None,
+            **cfg) -> ProfileResult:
+        if isinstance(workload, (tuple, list)) and workload \
+                and callable(workload[0]):
+            fn, *args = workload
+        elif callable(workload):
+            fn, args = workload, ()
+        else:
+            raise TypeError("tpu_graph workload must be a callable or a "
+                            "(fn, *example_args) tuple")
+        trace, ops = trace_jaxpr(fn, *args, **cfg)
+        kernels = [dataclasses.asdict(o) for o in ops]
+        if chunk_events:
+            return ProfileResult(chunks=chunk_trace(trace, chunk_events),
+                                 kernels=kernels, mode=self.mode,
+                                 meta={"n_ops": len(ops)})
+        return ProfileResult(trace=trace, kernels=kernels, mode=self.mode,
+                             meta={"n_ops": len(ops)})

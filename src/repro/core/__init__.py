@@ -1,33 +1,54 @@
 """GainSight core: the paper's contribution as a composable JAX library.
 
-  trace     - canonical memory-access trace schema (any backend -> frontend)
-  lifetime  - data-lifetime extraction (Definitions 4.1-4.3)
-  devices   - bit-cell mockups: SRAM / Si-GCRAM / Hybrid-GCRAM @ N5
-  frontend  - Algorithm 1: refresh / area / active-energy projection
-  composer  - heterogeneous memory composition (Table 7)
-  pka       - Principal Kernel Analysis workload sampling (Table 4)
-  orphans   - cache-pollution / orphaned access analysis (Table 8)
+The front door is ``repro.core.api`` (see ``docs/API.md``): a ``Backend``
+registry plus a ``ProfileSession`` that chains the whole paper workflow
+``profile() -> analyze() -> compose() -> report()`` over any backend::
+
+    from repro.core import ProfileSession
+    report = ProfileSession("systolic").run(layers, rows=128, cols=128)
+
+Modules:
+
+  api        - Backend protocol, @register_backend registry, ProfileSession
+  trace      - canonical memory-access trace schema (any backend -> frontend)
+  accumulate - TraceAccumulator: streaming/chunked lifetime analysis
+  lifetime   - data-lifetime extraction (Definitions 4.1-4.3)
+  devices    - bit-cell mockups: SRAM / Si-GCRAM / Hybrid-GCRAM @ N5
+  frontend   - Algorithm 1: refresh / area / active-energy projection
+  composer   - heterogeneous memory composition (Table 7)
+  pka        - Principal Kernel Analysis workload sampling (Table 4)
+  orphans    - cache-pollution / orphaned access analysis (Table 8)
 """
 
 from repro.core.devices import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM,
                                 SRAM, DeviceModel, device_by_name)
 from repro.core.frontend import (analyze_trace, compute_stats, device_report,
-                                 dump_report, energy_ratio_vs_sram)
+                                 dump_report, energy_ratio_vs_sram,
+                                 stats_from_lifetimes, subpartition_entry)
 from repro.core.lifetime import (LifetimeStats, extract_lifetimes,
                                  lifetime_histogram, lifetimes_of_trace,
                                  short_lived_fraction)
 from repro.core.composer import Composition, compose
 from repro.core.orphans import orphaned_access_fraction, policy_ablation
 from repro.core.pka import PKAResult, select_kernels, weighted_estimate
-from repro.core.trace import Trace, concat_traces, make_trace
+from repro.core.trace import Trace, chunk_trace, concat_traces, make_trace
+from repro.core.accumulate import (FoldedLifetimes, TraceAccumulator,
+                                   folded_short_lived_fraction)
+from repro.core.api import (Backend, ProfileResult, ProfileSession,
+                            available_backends, get_backend,
+                            register_backend, resolve_devices)
 
 __all__ = [
     "DEFAULT_DEVICES", "HYBRID_GCRAM", "SI_GCRAM", "SRAM", "DeviceModel",
     "device_by_name", "analyze_trace", "compute_stats", "device_report",
-    "dump_report", "energy_ratio_vs_sram", "LifetimeStats",
-    "extract_lifetimes", "lifetime_histogram", "lifetimes_of_trace",
-    "short_lived_fraction", "Composition", "compose",
-    "orphaned_access_fraction", "policy_ablation", "PKAResult",
-    "select_kernels", "weighted_estimate", "Trace", "concat_traces",
-    "make_trace",
+    "dump_report", "energy_ratio_vs_sram", "stats_from_lifetimes",
+    "subpartition_entry", "LifetimeStats", "extract_lifetimes",
+    "lifetime_histogram", "lifetimes_of_trace", "short_lived_fraction",
+    "Composition", "compose", "orphaned_access_fraction", "policy_ablation",
+    "PKAResult", "select_kernels", "weighted_estimate", "Trace",
+    "chunk_trace", "concat_traces", "make_trace", "FoldedLifetimes",
+    "TraceAccumulator", "folded_short_lived_fraction", "Backend",
+    "ProfileResult", "ProfileSession",
+    "available_backends", "get_backend", "register_backend",
+    "resolve_devices",
 ]

@@ -65,6 +65,13 @@ def compose(
     clock_hz: float = 1.0e9,
 ) -> Composition:
     """Derive the optimal refresh-free composition for one subpartition."""
+    if not devices:
+        raise ValueError("compose() needs a non-empty device set")
+    if not any(d.name == "SRAM" for d in devices):
+        raise ValueError(
+            "compose() needs SRAM in the device set as the "
+            "infinite-retention baseline; got "
+            f"{sorted(d.name for d in devices)}")
     lt = stats.lifetimes_s
     bits = stats.lifetime_bits
     reads = stats.accesses_per_lifetime - 1.0
@@ -79,9 +86,20 @@ def compose(
         [d.retention_at(stats.write_freq_hz) for d in devs])
 
     if len(lt) == 0:
+        # No valid lifetimes (empty trace, or every segment dead under
+        # no-write-allocate).  The monolithic baselines still exist: the
+        # accesses themselves cost energy even if no datum ever lived.
         frac = np.zeros(len(devs))
         frac[-1] = 1.0
-        return Composition(tuple(d.name for d in devs), frac, 0.0, 1.0, {})
+        mono = {d.name: analyze_energy(stats, d)[0] for d in devices}
+        sram_e = mono["SRAM"]
+        return Composition(
+            devices=tuple(d.name for d in devs),
+            capacity_fractions=frac,
+            energy_j=0.0,
+            energy_vs_sram=0.0 / sram_e if sram_e > 0 else math.nan,
+            monolithic_energy_j=mono,
+        )
 
     # Per-lifetime assignment: first (cheapest) device that covers it.
     fits = lt[None, :] <= retentions[:, None]          # [dev, lifetime]
@@ -125,7 +143,7 @@ def compose(
     for d in devices:
         e, _ = analyze_energy(stats, d)
         mono[d.name] = e
-    sram_e = mono.get("SRAM", max(mono.values()))
+    sram_e = mono["SRAM"]
 
     return Composition(
         devices=tuple(d.name for d in devs),

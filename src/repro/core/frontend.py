@@ -66,13 +66,23 @@ def compute_stats(
 ) -> SubpartitionStats:
     """Phase 1 + lifetime analysis for one subpartition."""
     t = trace.select(sub)
+    stats = lifetimes_of_trace(t, mode=mode, write_allocate=write_allocate)
+    return stats_from_lifetimes(t, sub, stats)
+
+
+def stats_from_lifetimes(
+    t: Trace,
+    sub: int,
+    stats: LifetimeStats,
+) -> SubpartitionStats:
+    """Build SubpartitionStats from a single-subpartition trace and its
+    already-extracted lifetimes (shared by compute_stats and the
+    ProfileSession pipeline, which reuses the extraction for compose())."""
     n_reads, n_writes = t.counts()
     addrs = np.asarray(t.addr)
     n_unique = int(len(np.unique(addrs))) if len(addrs) else 0
     dur = max(t.duration_s, 1e-30)
 
-    stats: LifetimeStats = lifetimes_of_trace(
-        t, mode=mode, write_allocate=write_allocate)
     valid = np.asarray(stats.valid)
     lt_s = np.asarray(stats.lifetime_cycles)[valid] / t.clock_hz
     n_rd = np.asarray(stats.n_reads)[valid]
@@ -137,6 +147,31 @@ def device_report(
     )
 
 
+def subpartition_entry(
+    st: SubpartitionStats,
+    devices: Sequence[DeviceModel] = DEFAULT_DEVICES,
+) -> dict:
+    """One subpartition's JSON report entry (paper §6.3)."""
+    entry = {
+        "n_reads": st.n_reads,
+        "n_writes": st.n_writes,
+        "unique_addrs": st.n_unique_addrs,
+        "capacity_bits": st.capacity_bits,
+        "duration_s": st.duration_s,
+        "write_freq_hz": st.write_freq_hz,
+        "orphan_fraction": st.orphan_fraction,
+        "n_lifetimes": int(len(st.lifetimes_s)),
+        "mean_lifetime_s": float(st.lifetimes_s.mean())
+        if len(st.lifetimes_s) else 0.0,
+        "max_lifetime_s": float(st.lifetimes_s.max())
+        if len(st.lifetimes_s) else 0.0,
+        "devices": {},
+    }
+    for dev in devices:
+        entry["devices"][dev.name] = device_report(st, dev).asdict()
+    return entry
+
+
 def analyze_trace(
     trace: Trace,
     mode: str = "scratchpad",
@@ -152,24 +187,7 @@ def analyze_trace(
     subs = np.unique(np.asarray(trace.subpartition))
     for sub in subs.tolist():
         st = compute_stats(trace, int(sub), mode, write_allocate)
-        entry = {
-            "n_reads": st.n_reads,
-            "n_writes": st.n_writes,
-            "unique_addrs": st.n_unique_addrs,
-            "capacity_bits": st.capacity_bits,
-            "duration_s": st.duration_s,
-            "write_freq_hz": st.write_freq_hz,
-            "orphan_fraction": st.orphan_fraction,
-            "n_lifetimes": int(len(st.lifetimes_s)),
-            "mean_lifetime_s": float(st.lifetimes_s.mean())
-            if len(st.lifetimes_s) else 0.0,
-            "max_lifetime_s": float(st.lifetimes_s.max())
-            if len(st.lifetimes_s) else 0.0,
-            "devices": {},
-        }
-        for dev in devices:
-            entry["devices"][dev.name] = device_report(st, dev).asdict()
-        report["subpartitions"][st.name] = entry
+        report["subpartitions"][st.name] = subpartition_entry(st, devices)
     return report
 
 
@@ -181,5 +199,21 @@ def dump_report(report: dict, path: str) -> None:
 def energy_ratio_vs_sram(report: dict, sub_name: str, device: str) -> float:
     """Active-energy ratio of a device over SRAM for one subpartition
     (paper Table 6)."""
-    devs = report["subpartitions"][sub_name]["devices"]
+    subs = report.get("subpartitions", {})
+    if sub_name not in subs:
+        raise ValueError(
+            f"subpartition {sub_name!r} not in report "
+            f"(have {sorted(subs)})")
+    devs = subs[sub_name].get("devices", {})
+    if not devs:
+        raise ValueError(
+            f"subpartition {sub_name!r} was analyzed with an empty "
+            "device set; re-run analyze with at least SRAM")
+    if "SRAM" not in devs:
+        raise ValueError(
+            "energy_ratio_vs_sram needs an SRAM baseline but the device "
+            f"set is {sorted(devs)}; include SRAM in `devices`")
+    if device not in devs:
+        raise ValueError(
+            f"device {device!r} not in report (have {sorted(devs)})")
     return devs[device]["active_energy_j"] / devs["SRAM"]["active_energy_j"]

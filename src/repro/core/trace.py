@@ -93,7 +93,13 @@ def make_trace(
 
 
 def concat_traces(traces: Sequence[Trace]) -> Trace:
-    """Concatenate traces that share metadata (e.g. per-kernel streams)."""
+    """Concatenate traces that share metadata (e.g. per-kernel streams).
+
+    This materializes one flat trace; for long multi-step workloads prefer
+    feeding the per-step traces to ``repro.core.accumulate.TraceAccumulator``
+    (or ``ProfileSession.profile(..., chunk_events=...)``), which folds
+    lifetime statistics chunk by chunk in bounded memory.
+    """
     base = traces[0]
     return Trace(
         time_cycles=np.concatenate([np.asarray(t.time_cycles) for t in traces]),
@@ -106,3 +112,31 @@ def concat_traces(traces: Sequence[Trace]) -> Trace:
         block_bits=base.block_bits,
         names=base.names,
     )
+
+
+def chunk_trace(trace: Trace, max_events: int):
+    """Split a time-sorted trace into contiguous chunks of at most
+    ``max_events`` events.
+
+    Because the split is along the (already time-ordered) event axis, each
+    address's events stay time-ordered across chunks, which is exactly the
+    contract ``TraceAccumulator.update`` needs for chunked analysis to
+    match the monolithic result.
+    """
+    if max_events <= 0:
+        raise ValueError(f"max_events must be positive, got {max_events}")
+    n = trace.n_events
+    for lo in range(0, max(n, 1), max_events):
+        hi = min(lo + max_events, n)
+        yield Trace(
+            time_cycles=np.asarray(trace.time_cycles)[lo:hi],
+            addr=np.asarray(trace.addr)[lo:hi],
+            is_write=np.asarray(trace.is_write)[lo:hi],
+            hit=np.asarray(trace.hit)[lo:hi],
+            subpartition=np.asarray(trace.subpartition)[lo:hi],
+            clock_hz=trace.clock_hz,
+            block_bits=trace.block_bits,
+            names=trace.names,
+        )
+        if hi >= n:
+            return

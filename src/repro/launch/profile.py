@@ -1,15 +1,21 @@
 """GainSight profiling driver: the paper's workflow as a framework feature.
 
-For a given architecture, generate memory traces on the selected backend,
-run the analytical frontend, and emit the heterogeneous-memory report
-(JSON + console): data lifetimes, device projections, optimal composition.
+A thin CLI over :class:`repro.core.ProfileSession` - for a given
+architecture, run the selected registry backend, the analytical frontend,
+and the heterogeneous-memory composition, and emit the report
+(JSON + console).
 
-  PYTHONPATH=src python -m repro.launch.profile --arch tinyllama_1_1b \
+  PYTHONPATH=src python -m repro profile --arch tinyllama_1_1b \
       --backend systolic --dataflow ws --pe 128
-  PYTHONPATH=src python -m repro.launch.profile --arch tinyllama_1_1b \
+  PYTHONPATH=src python -m repro profile --arch tinyllama_1_1b \
       --backend gpu --seq 128
-  PYTHONPATH=src python -m repro.launch.profile --arch mamba2_130m \
+  PYTHONPATH=src python -m repro profile --arch mamba2_130m \
       --backend tpu --seq 64
+  PYTHONPATH=src python -m repro profile --backend systolic --dry-run
+
+(``python -m repro.launch.profile ...`` still works; the legacy
+``profile_systolic``/``profile_gpu``/``profile_tpu`` entry points remain
+as shims over the session API.)
 """
 
 from __future__ import annotations
@@ -17,16 +23,9 @@ from __future__ import annotations
 import argparse
 import json
 
-import jax
-import numpy as np
-
-from repro.backends.cachesim import HierarchyConfig, simulate_hierarchy
-from repro.backends.opstream import StreamBuilder, transformer_ops
-from repro.backends.systolic import GemmLayer, SystolicConfig, simulate
-from repro.configs.base import ShapeCell, get_config
-from repro.core import (HYBRID_GCRAM, SI_GCRAM, analyze_trace, compose,
-                        compute_stats, lifetimes_of_trace,
-                        short_lived_fraction)
+from repro.backends.systolic import GemmLayer
+from repro.configs.base import get_config
+from repro.core import HYBRID_GCRAM, SI_GCRAM, ProfileSession
 
 
 def transformer_gemms(cfg, seq: int, n_layers: int = 2):
@@ -48,72 +47,106 @@ def transformer_gemms(cfg, seq: int, n_layers: int = 2):
     return layers
 
 
-def profile_systolic(cfg, seq, dataflow, pe, out):
-    sc = SystolicConfig(rows=pe, cols=pe, dataflow=dataflow)
-    trace, kstats = simulate(transformer_gemms(cfg, seq), sc)
-    report = analyze_trace(trace, mode="scratchpad")
-    report["kernels"] = kstats
-    _summarize(trace, report, ("ifmap", "filter", "ofmap"), "scratchpad",
-               out)
-    return report
+def _op_program(cfg, seq):
+    """Op-stream program for the cache-hierarchy ("gpu") backend."""
+    def program(sb):
+        from repro.backends.opstream import transformer_ops
+        transformer_ops(sb, cfg.d_model, max(cfg.n_heads, 1),
+                        max(cfg.kv_heads, 1), cfg.d_ff or 4 * cfg.d_model,
+                        seq, n_layers=2, moe_experts=cfg.moe_experts,
+                        moe_topk=cfg.moe_topk)
+    return program
 
 
-def profile_gpu(cfg, seq, out, sample=8):
-    sb = StreamBuilder(sample=sample)
-    transformer_ops(sb, cfg.d_model, max(cfg.n_heads, 1),
-                    max(cfg.kv_heads, 1), cfg.d_ff or 4 * cfg.d_model,
-                    seq, n_layers=2, moe_experts=cfg.moe_experts,
-                    moe_topk=cfg.moe_topk)
-    t, a, w = sb.finish()
-    trace = simulate_hierarchy(t, a, w, HierarchyConfig())
-    report = analyze_trace(trace, mode="cache")
-    report["kernels"] = [k.__dict__ for k in sb.kernels]
-    _summarize(trace, report, ("L1", "L2"), "cache", out)
-    return report
+def _tpu_workload(cfg, seq):
+    import jax
 
-
-def profile_tpu(cfg, seq, out):
-    from repro.backends.tpu_graph import trace_jaxpr
+    from repro.configs.base import ShapeCell
     from repro.models.api import batch_specs, build
     api = build(cfg)
-    shape = ShapeCell("p", "train", seq, 1)
-    bspec = batch_specs(cfg, shape)
+    bspec = batch_specs(cfg, ShapeCell("p", "train", seq, 1))
     params_sds = jax.eval_shape(lambda k: api.init(k)[0],
                                 jax.random.PRNGKey(0))
-    trace, ops = trace_jaxpr(api.loss, params_sds, bspec, sample=4)
-    report = analyze_trace(trace, mode="scratchpad")
-    report["n_ops"] = len(ops)
-    _summarize(trace, report, ("VMEM",), "scratchpad", out)
-    return report
+    return (api.loss, params_sds, bspec)
 
 
-def _summarize(trace, report, subs, mode, out):
+def _summarize(session: ProfileSession, out: str | None) -> dict:
+    """Console summary + composition entries + optional JSON dump."""
+    report = session.report()
     print(json.dumps(
         {k: {kk: vv for kk, vv in v.items() if kk != "devices"}
          for k, v in report["subpartitions"].items()}, indent=1,
         default=str)[:1200])
-    for i, name in enumerate(subs):
-        if name not in report["subpartitions"]:
-            continue
-        raw = lifetimes_of_trace(trace.select(i), mode=mode)
-        st = compute_stats(trace, i, mode=mode)
-        comp = compose(st, raw=raw, clock_hz=trace.clock_hz)
-        f_si = short_lived_fraction(raw, trace.clock_hz,
-                                    SI_GCRAM.retention_s)
-        f_hy = short_lived_fraction(raw, trace.clock_hz,
-                                    HYBRID_GCRAM.retention_s)
+    for name in report["subpartitions"]:
+        comp = session.composition(name)
+        f_si = session.short_lived_fraction(name, SI_GCRAM.retention_s)
+        f_hy = session.short_lived_fraction(name, HYBRID_GCRAM.retention_s)
         print(f"{name}: short-lived {100 * f_si:.1f}% @Si-GC(1us) / "
               f"{100 * f_hy:.1f}% @Hy-GC(10us)   composition "
               f"{comp.summary()}")
-        report["subpartitions"][name]["composition"] = {
-            "devices": list(comp.devices),
-            "capacity_fractions": comp.capacity_fractions.tolist(),
-            "energy_vs_sram": comp.energy_vs_sram,
-        }
     if out:
-        with open(out, "w") as f:
-            json.dump(report, f, indent=1, default=str)
+        session.report(out)
         print(f"report -> {out}")
+    return report
+
+
+# ---------------------------------------------------------------------------
+# legacy entry points (deprecation shims over ProfileSession)
+# ---------------------------------------------------------------------------
+
+def profile_systolic(cfg, seq, dataflow, pe, out, chunk_events=None):
+    session = ProfileSession("systolic")
+    session.profile(transformer_gemms(cfg, seq), rows=pe, cols=pe,
+                    dataflow=dataflow, chunk_events=chunk_events)
+    session.analyze().compose()
+    return _summarize(session, out)
+
+
+def profile_gpu(cfg, seq, out, sample=8, chunk_events=None):
+    session = ProfileSession("gpu")
+    session.profile(_op_program(cfg, seq), sample=sample,
+                    chunk_events=chunk_events)
+    session.analyze().compose()
+    return _summarize(session, out)
+
+
+def profile_tpu(cfg, seq, out):
+    session = ProfileSession("tpu")
+    session.profile(_tpu_workload(cfg, seq), sample=4)
+    session.analyze().compose()
+    return _summarize(session, out)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+_DRY_SEQ = 16
+
+
+def _dry_run(backend: str) -> dict:
+    """Minimal end-to-end pipeline smoke for CI: tiny built-in workload."""
+    session = ProfileSession(backend)
+    name = session.backend.name
+    if name == "systolic":
+        session.profile([GemmLayer("dry", 32, 32, 32)], rows=16, cols=16)
+    elif name in ("cachesim", "opstream"):
+        def program(sb):
+            from repro.backends.opstream import transformer_ops
+            transformer_ops(sb, d_model=64, n_heads=2, kv_heads=2,
+                            d_ff=128, seq=_DRY_SEQ, n_layers=1)
+        session.profile(program)
+    else:  # tpu_graph
+        import jax
+        import jax.numpy as jnp
+        x = jax.ShapeDtypeStruct((_DRY_SEQ, _DRY_SEQ), jnp.float32)
+        session.profile((lambda a: (a @ a).sum(), x))
+    report = session.analyze().compose().report()
+    subs = report["subpartitions"]
+    events = sum(v["n_reads"] + v["n_writes"] for v in subs.values())
+    print(f"dry-run ok: backend={name} subpartitions={sorted(subs)} "
+          f"events={events}")
+    return report
 
 
 def main(argv=None):
@@ -122,12 +155,21 @@ def main(argv=None):
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--backend", default="systolic",
-                    choices=["systolic", "gpu", "tpu"])
+                    choices=["systolic", "gpu", "cachesim", "opstream",
+                             "tpu", "tpu_graph"])
     ap.add_argument("--dataflow", default="ws", choices=["is", "ws", "os"])
     ap.add_argument("--pe", type=int, default=128)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--chunk-events", type=int, default=None,
+                    help="stream the trace to the frontend in chunks of "
+                         "this many events (bounded-memory analysis)")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="tiny built-in workload; pipeline smoke test")
     args = ap.parse_args(argv)
+
+    if args.dry_run:
+        return _dry_run(args.backend)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if args.backend == "systolic":
@@ -135,10 +177,17 @@ def main(argv=None):
         # is governed by seq, not params)
         cfg = get_config(args.arch, smoke=False)
         return profile_systolic(cfg, args.seq, args.dataflow, args.pe,
-                                args.out)
-    if args.backend == "gpu":
+                                args.out, chunk_events=args.chunk_events)
+    if args.backend in ("gpu", "cachesim"):
         cfg = get_config(args.arch, smoke=False)
-        return profile_gpu(cfg, args.seq, args.out)
+        return profile_gpu(cfg, args.seq, args.out,
+                           chunk_events=args.chunk_events)
+    if args.backend == "opstream":
+        cfg = get_config(args.arch, smoke=False)
+        session = ProfileSession("opstream")
+        session.profile(_op_program(cfg, args.seq), sample=8)
+        session.analyze().compose()
+        return _summarize(session, args.out)
     return profile_tpu(cfg, args.seq, args.out)
 
 

@@ -1,0 +1,339 @@
+"""Tests for the unified pipeline API: backend registry round-trips,
+ProfileSession vs the hand-wired seed pipeline (bit-for-bit), streaming
+TraceAccumulator equivalence, and the satellite bugfixes (ValueError on
+degenerate device sets, empty-trace composition baselines)."""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.backends.systolic import GemmLayer, SystolicConfig, simulate
+from repro.core import (DEFAULT_DEVICES, SI_GCRAM, ProfileSession,
+                        TraceAccumulator, analyze_trace,
+                        available_backends, chunk_trace, compose,
+                        compute_stats, energy_ratio_vs_sram, get_backend,
+                        lifetimes_of_trace, make_trace, register_backend,
+                        short_lived_fraction)
+from repro.core.api import _ALIASES, _REGISTRY
+
+
+# ---------------------------------------------------------------------------
+# registry
+# ---------------------------------------------------------------------------
+
+def test_registry_all_builtin_backends_discoverable():
+    for name in ("systolic", "cachesim", "opstream", "tpu_graph"):
+        b = get_backend(name)
+        assert b.name == name
+        assert b.mode in ("scratchpad", "cache")
+        assert callable(b.run)
+    assert set(available_backends()) >= {
+        "systolic", "cachesim", "opstream", "tpu_graph"}
+
+
+def test_registry_aliases():
+    assert get_backend("gpu").name == "cachesim"
+    assert get_backend("tpu").name == "tpu_graph"
+
+
+def test_registry_unknown_backend():
+    with pytest.raises(ValueError, match="unknown backend"):
+        get_backend("accelsim")
+
+
+def test_register_backend_decorator_roundtrip():
+    @register_backend("dummy-test-backend")
+    class Dummy:
+        name = "dummy-test-backend"
+        mode = "scratchpad"
+
+        def run(self, workload, **cfg):
+            raise NotImplementedError
+
+    try:
+        assert get_backend("dummy-test-backend").name == "dummy-test-backend"
+    finally:
+        _REGISTRY.pop("dummy-test-backend", None)
+        _ALIASES.pop("dummy-test-backend", None)
+
+
+# ---------------------------------------------------------------------------
+# ProfileSession == hand-wired seed pipeline, bit for bit
+# ---------------------------------------------------------------------------
+
+def _handwired_report(trace, kernels, mode):
+    """The seed's glue: backend trace -> analyze_trace -> compose."""
+    report = analyze_trace(trace, mode=mode)
+    if kernels:
+        report["kernels"] = kernels
+    subs = np.unique(np.asarray(trace.subpartition)).tolist()
+    for sub in subs:
+        name = trace.names[sub]
+        st = compute_stats(trace, sub, mode=mode)
+        raw = lifetimes_of_trace(trace.select(sub), mode=mode)
+        comp = compose(st, raw=raw, clock_hz=trace.clock_hz)
+        report["subpartitions"][name]["composition"] = {
+            "devices": list(comp.devices),
+            "capacity_fractions": comp.capacity_fractions.tolist(),
+            "energy_vs_sram": comp.energy_vs_sram,
+        }
+    return report
+
+
+def test_session_matches_handwired_systolic():
+    layers = [GemmLayer("a", 48, 64, 64), GemmLayer("b", 32, 48, 96)]
+    cfg = SystolicConfig(rows=32, cols=32, dataflow="ws")
+    trace, kstats = simulate(layers, cfg)
+    old = _handwired_report(trace, kstats, "scratchpad")
+
+    session = ProfileSession("systolic")
+    new = session.profile(layers, rows=32, cols=32,
+                          dataflow="ws").analyze().compose().report()
+    assert json.dumps(old, sort_keys=True) == json.dumps(
+        new, sort_keys=True)
+
+
+def test_session_matches_handwired_cachesim():
+    from repro.backends.cachesim import HierarchyConfig, simulate_hierarchy
+    from repro.backends.opstream import StreamBuilder, transformer_ops
+
+    def program(sb):
+        transformer_ops(sb, d_model=64, n_heads=2, kv_heads=2, d_ff=128,
+                        seq=16, n_layers=1)
+
+    sb = StreamBuilder(sample=1)
+    program(sb)
+    t, a, w = sb.finish()
+    trace = simulate_hierarchy(t, a, w, HierarchyConfig())
+    old = _handwired_report(trace, [k.__dict__ for k in sb.kernels],
+                            "cache")
+
+    session = ProfileSession("cachesim")
+    new = session.profile(program).analyze().compose().report()
+    assert json.dumps(old, sort_keys=True) == json.dumps(
+        new, sort_keys=True)
+
+
+def test_session_device_resolution_by_name():
+    layers = [GemmLayer("a", 32, 32, 32)]
+    session = ProfileSession("systolic",
+                             devices=("SRAM", "Si-GCRAM", "Hybrid-GCRAM"))
+    report = session.run(layers, rows=16, cols=16)
+    devs = report["subpartitions"]["ifmap"]["devices"]
+    assert set(devs) == {"SRAM", "Si-GCRAM", "Hybrid-GCRAM"}
+
+
+def test_session_from_trace_equals_analyze_trace():
+    tr = make_trace([0, 10, 20, 30], [1, 1, 2, 2],
+                    [True, False, True, False])
+    direct = analyze_trace(tr, mode="scratchpad")
+    via = ProfileSession.from_trace(tr, mode="scratchpad").report()
+    assert json.dumps(direct, sort_keys=True) == json.dumps(
+        via, sort_keys=True)
+
+
+def test_session_requires_profile_before_analyze():
+    with pytest.raises(RuntimeError, match="profile"):
+        ProfileSession("systolic").analyze()
+
+
+# ---------------------------------------------------------------------------
+# TraceAccumulator: chunked == monolithic
+# ---------------------------------------------------------------------------
+
+def _assert_stats_equal(st_m, st_s):
+    assert st_m.n_reads == st_s.n_reads
+    assert st_m.n_writes == st_s.n_writes
+    assert st_m.n_unique_addrs == st_s.n_unique_addrs
+    assert st_m.duration_s == pytest.approx(st_s.duration_s, rel=1e-12)
+    assert len(st_m.lifetimes_s) == len(st_s.lifetimes_s)
+    assert np.array_equal(np.sort(st_m.lifetimes_s),
+                          np.sort(st_s.lifetimes_s))
+    assert np.array_equal(np.sort(st_m.accesses_per_lifetime),
+                          np.sort(st_s.accesses_per_lifetime))
+    assert st_m.orphan_fraction == pytest.approx(st_s.orphan_fraction,
+                                                 abs=1e-15)
+
+
+def test_accumulator_chunked_equals_monolithic_systolic():
+    trace, _ = simulate([GemmLayer("g", 48, 64, 64)],
+                        SystolicConfig(rows=32, cols=32, dataflow="ws"))
+    acc = TraceAccumulator(mode="scratchpad")
+    for chunk in chunk_trace(trace, 997):
+        acc.update(chunk)
+    for sub in (0, 1, 2):
+        _assert_stats_equal(compute_stats(trace, sub, mode="scratchpad"),
+                            acc.stats(sub)[0])
+
+
+@pytest.mark.parametrize("mode,write_allocate",
+                         [("scratchpad", True), ("cache", True),
+                          ("cache", False)])
+def test_accumulator_random_traces(mode, write_allocate):
+    rng = np.random.RandomState(7)
+    for trial in range(8):
+        n = rng.randint(5, 300)
+        tr = make_trace(
+            np.sort(rng.randint(0, 2000, n)),
+            rng.randint(0, 10, n),
+            rng.rand(n) < 0.35,
+            hit=rng.rand(n) < 0.6,
+            subpartition=rng.randint(0, 2, n),
+            names=("A", "B"))
+        acc = TraceAccumulator(mode=mode, write_allocate=write_allocate)
+        for chunk in chunk_trace(tr, int(rng.randint(1, n + 1))):
+            acc.update(chunk)
+        for sub in np.unique(np.asarray(tr.subpartition)).tolist():
+            st_m = compute_stats(tr, int(sub), mode=mode,
+                                 write_allocate=write_allocate)
+            st_s, raw_s = acc.stats(int(sub))
+            _assert_stats_equal(st_m, st_s)
+            # event-weighted short-lived fractions must agree too
+            raw_m = lifetimes_of_trace(tr.select(int(sub)), mode=mode,
+                                       write_allocate=write_allocate)
+            for ret in (1e-7, 1e-6):
+                assert short_lived_fraction(
+                    raw_m, tr.clock_hz, ret) == pytest.approx(
+                    acc.short_lived_fraction(int(sub), ret), abs=1e-12)
+
+
+def test_accumulator_compose_matches_monolithic():
+    trace, _ = simulate([GemmLayer("g", 32, 48, 48)],
+                        SystolicConfig(rows=32, cols=32, dataflow="os"))
+    acc = TraceAccumulator(mode="scratchpad")
+    for chunk in chunk_trace(trace, 503):
+        acc.update(chunk)
+    for sub in (0, 1, 2):
+        st_m = compute_stats(trace, sub, mode="scratchpad")
+        raw_m = lifetimes_of_trace(trace.select(sub), mode="scratchpad")
+        comp_m = compose(st_m, raw=raw_m, clock_hz=trace.clock_hz)
+        st_s, raw_s = acc.stats(sub)
+        comp_s = compose(st_s, raw=raw_s, clock_hz=trace.clock_hz)
+        assert comp_m.devices == comp_s.devices
+        np.testing.assert_allclose(comp_m.capacity_fractions,
+                                   comp_s.capacity_fractions, atol=1e-12)
+        assert comp_m.energy_vs_sram == pytest.approx(
+            comp_s.energy_vs_sram, rel=1e-12)
+
+
+def test_accumulator_rejects_metadata_mismatch():
+    t1 = make_trace([0, 1], [0, 0], [True, False], clock_hz=1e9)
+    t2 = make_trace([2, 3], [0, 0], [True, False], clock_hz=2e9)
+    acc = TraceAccumulator()
+    acc.update(t1)
+    with pytest.raises(ValueError, match="metadata"):
+        acc.update(t2)
+
+
+def test_session_streaming_reanalyze():
+    # re-analyze after the chunk stream is consumed: same fold params are
+    # recomputed from the accumulator, different params raise (the raw
+    # events are gone)
+    layers = [GemmLayer("g", 32, 32, 32)]
+    s = ProfileSession("systolic")
+    s.profile(layers, rows=16, cols=16, chunk_events=500)
+    first = json.dumps(s.analyze().report(), sort_keys=True)
+    again = json.dumps(s.analyze().report(), sort_keys=True)
+    assert first == again
+    assert json.loads(again)["subpartitions"]  # not silently empty
+    with pytest.raises(RuntimeError, match="folded once"):
+        s.analyze(mode="cache")
+
+
+def test_opstream_and_tpu_graph_chunk_events_stream():
+    def program(sb):
+        from repro.backends.opstream import transformer_ops
+        transformer_ops(sb, d_model=64, n_heads=2, kv_heads=2, d_ff=128,
+                        seq=8, n_layers=1)
+
+    res = get_backend("opstream").run(program, chunk_events=200)
+    assert res.streaming
+    mono = get_backend("opstream").run(program)
+    r_m = ProfileSession.from_trace(mono.trace).report()
+    r_s = ProfileSession.from_chunks(res.chunks).report()
+    assert (r_m["subpartitions"]["stream"]["n_lifetimes"]
+            == r_s["subpartitions"]["stream"]["n_lifetimes"])
+    with pytest.raises(TypeError):
+        get_backend("opstream").run(program, bogus_kwarg=1)
+
+
+def test_session_streaming_report_close_to_monolithic():
+    layers = [GemmLayer("g", 48, 64, 64)]
+    mono = ProfileSession("systolic").run(layers, rows=32, cols=32)
+    stream = ProfileSession("systolic").run(layers, rows=32, cols=32,
+                                            chunk_events=1024)
+    assert mono["subpartitions"].keys() == stream["subpartitions"].keys()
+    for name in mono["subpartitions"]:
+        m, s = (r["subpartitions"][name] for r in (mono, stream))
+        assert m["n_reads"] == s["n_reads"]
+        assert m["n_lifetimes"] == s["n_lifetimes"]
+        assert m["mean_lifetime_s"] == pytest.approx(
+            s["mean_lifetime_s"], rel=1e-12)
+        assert m["composition"]["energy_vs_sram"] == pytest.approx(
+            s["composition"]["energy_vs_sram"], rel=1e-12)
+
+
+# ---------------------------------------------------------------------------
+# satellite bugfixes: degenerate device sets, empty-trace composition
+# ---------------------------------------------------------------------------
+
+def test_compose_rejects_empty_and_sramless_device_sets():
+    tr = make_trace([0, 10], [1, 1], [True, False])
+    st = compute_stats(tr, 0)
+    with pytest.raises(ValueError, match="non-empty"):
+        compose(st, devices=())
+    with pytest.raises(ValueError, match="SRAM"):
+        compose(st, devices=(SI_GCRAM,))
+
+
+def test_energy_ratio_vs_sram_clear_errors():
+    tr = make_trace([0, 10], [1, 1], [True, False])
+    report = analyze_trace(tr)
+    with pytest.raises(ValueError, match="subpartition"):
+        energy_ratio_vs_sram(report, "nope", "Si-GCRAM")
+    with pytest.raises(ValueError, match="not in report"):
+        energy_ratio_vs_sram(report, "mem", "FeRAM")
+    no_sram = analyze_trace(tr, devices=(SI_GCRAM,))
+    with pytest.raises(ValueError, match="SRAM"):
+        energy_ratio_vs_sram(no_sram, "mem", "Si-GCRAM")
+
+
+def test_compose_empty_trace_keeps_monolithic_baselines():
+    # no-write-allocate cache: a lone write-miss segment is dead, so there
+    # are zero valid lifetimes but the accesses still cost energy
+    tr = make_trace([0, 5], [1, 1], [True, True],
+                    hit=[False, False])
+    st = compute_stats(tr, 0, mode="cache", write_allocate=False)
+    assert len(st.lifetimes_s) == 0 and st.n_writes == 2
+    comp = compose(st, clock_hz=tr.clock_hz)
+    assert set(comp.monolithic_energy_j) == {d.name
+                                             for d in DEFAULT_DEVICES}
+    assert comp.monolithic_energy_j["SRAM"] > 0
+    assert comp.energy_j == 0.0
+    assert comp.energy_vs_sram == 0.0          # not the fabricated 1.0
+    frac = dict(zip(comp.devices, comp.capacity_fractions))
+    assert frac["SRAM"] == pytest.approx(1.0)
+
+
+def test_compose_truly_empty_trace_is_nan_ratio():
+    tr = make_trace([], [], [])
+    st = compute_stats(tr, 0)
+    comp = compose(st, clock_hz=tr.clock_hz)
+    assert comp.monolithic_energy_j["SRAM"] == 0.0
+    assert np.isnan(comp.energy_vs_sram)
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+
+def test_cli_profile_dry_run():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro", "profile", "--backend", "systolic",
+         "--dry-run"],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "dry-run ok: backend=systolic" in out.stdout

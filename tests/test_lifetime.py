@@ -3,7 +3,12 @@ Algorithm-1 frontend, composer, PKA, orphans."""
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip(
+    "hypothesis",
+    reason="property tests need hypothesis (pip install -r "
+           "requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM, SRAM,
                         analyze_trace, compose, compute_stats,
