@@ -40,15 +40,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table4|table6|table7|table8|table9|fig8|fig10|"
-                         "kernels|pipeline")
+                         "kernels|pipeline|cachesim")
     args = ap.parse_args()
 
     from benchmarks import paper_tables as pt
+    from benchmarks.cachesim_bench import cachesim_bench
     from benchmarks.fig5_retention import fig5_retention
     from benchmarks.kernels_bench import kernels_bench
 
     benches = {
         "pipeline": pipeline_bench,
+        "cachesim": cachesim_bench,
         "table4": pt.table4_pka,
         "fig5": fig5_retention,
         "table6": pt.table6_energy,

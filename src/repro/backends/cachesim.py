@@ -6,9 +6,31 @@ two-level write-back cache hierarchy modeled after an H100 SM slice:
 configurable size / associativity / line size, LRU replacement, and the
 write-allocation policy ablation of §5.1.2 / §7.1.6.
 
-The simulator is a jitted ``jax.lax.scan`` over the access stream - the
-cycle-accurate "backend" runs compiled on the accelerator rather than as a
-Python interpreter loop (DESIGN.md §3).
+Two jitted implementations of the per-level replay exist:
+
+  ``set_parallel`` (default)
+      Accesses to different cache sets are independent in a set-associative
+      cache, so the stream is partitioned by set index on the host, all
+      sets are simulated concurrently by one batched ``lax.scan`` whose
+      carry is just each set's ``ways``-wide state, and per-access outputs
+      are scattered back into stream order.  The scan length drops from
+      ``n_events`` to ``max`` events-per-set (~``n_events / n_sets`` for
+      realistic streams), which is where the >=10x large-trace speedup
+      comes from (``benchmarks/cachesim_bench.py`` tracks it).
+
+  ``scalar``
+      The original one-access-per-step ``lax.scan`` over the whole
+      ``(n_sets, ways)`` tag array.  Kept as the differential oracle: the
+      set-parallel simulator is bit-for-bit identical to it (randomized
+      differential tests in ``tests/test_cachesim_parallel.py``).
+
+Select via ``HierarchyConfig(simulator="scalar")`` (or the ``simulator=``
+kwarg through ``ProfileSession("gpu")`` / ``CacheHierarchyBackend.run``).
+
+Cycle stamps, line addresses, and the LRU clock are carried as **int64**
+(under a scoped ``jax.experimental.enable_x64``): line addresses >= 2**31
+and multi-billion-cycle streams are exact, matching the int64 trace
+contract of ``repro.core.trace``.
 
 L2 stream composition (write-back hierarchy):
   - L1 read misses and (under write-allocate) L1 write misses fetch the
@@ -25,12 +47,15 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from repro.core.api import ProfileResult, register_backend
 from repro.core.trace import Trace, chunk_trace
 
 L1, L2 = 0, 1
 SUB_NAMES = ("L1", "L2")
+
+SIMULATORS = ("set_parallel", "scalar")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -51,25 +76,41 @@ class HierarchyConfig:
     write_allocate: bool = True
     clock_hz: float = 1.0e9
     l2_latency: int = 30  # cycles added to L2 access stamps
+    simulator: str = "set_parallel"  # or "scalar" (differential oracle)
 
 
-@partial(jax.jit, static_argnames=("n_sets", "ways", "write_allocate"))
 def _simulate_cache(line_addr, is_write, n_sets, ways, write_allocate):
-    """Scan one cache level. Returns (hit, fill, evict_addr, evict_dirty).
+    """Scalar oracle: scan one access per step over one cache level.
 
+    Host entry point: inputs are promoted to int64 inside a scoped x64
+    region, so streams with addresses past 2**31 are exact for *any*
+    caller (a bare jitted entry would let jax's default 32-bit mode
+    silently demote int64 inputs at conversion).  Returns numpy
+    (hit, fill, evict_addr, evict_dirty):
     fill:        line was allocated (miss that fetched from next level)
     evict_addr:  address of a line evicted by the fill (-1 if none/invalid)
     evict_dirty: evicted line was dirty (needs write-back)
     """
-    n = line_addr.shape[0]
-    tags0 = jnp.full((n_sets, ways), -1, jnp.int32)
+    with enable_x64():
+        outs = _simulate_cache_scan(
+            jnp.asarray(np.asarray(line_addr, np.int64)),
+            jnp.asarray(np.asarray(is_write, bool)),
+            n_sets, ways, write_allocate)
+    return tuple(np.asarray(x) for x in outs)
+
+
+@partial(jax.jit, static_argnames=("n_sets", "ways", "write_allocate"))
+def _simulate_cache_scan(line_addr, is_write, n_sets, ways, write_allocate):
+    addrs = jnp.asarray(line_addr)
+    dt = addrs.dtype
+    tags0 = jnp.full((n_sets, ways), -1, dt)
     dirty0 = jnp.zeros((n_sets, ways), bool)
-    stamp0 = jnp.zeros((n_sets, ways), jnp.int32)
+    stamp0 = jnp.zeros((n_sets, ways), dt)
 
     def step(state, inp):
         tags, dirty, stamp, clock = state
         addr, w = inp
-        s = (addr % n_sets).astype(jnp.int32)
+        s = addr % n_sets
         row = tags[s]
         match = row == addr
         hit = match.any()
@@ -94,9 +135,167 @@ def _simulate_cache(line_addr, is_write, n_sets, ways, write_allocate):
         return (tags, dirty, stamp, clock + 1), out
 
     (_, _, _, _), outs = jax.lax.scan(
-        step, (tags0, dirty0, stamp0, jnp.int32(1)),
-        (line_addr.astype(jnp.int32), is_write.astype(bool)))
+        step, (tags0, dirty0, stamp0, jnp.asarray(1, dt)),
+        (addrs, is_write.astype(bool)))
     return outs
+
+
+@partial(jax.jit, static_argnames=("ways", "write_allocate"))
+def _simulate_cache_sets(packed, counts, ways, write_allocate):
+    """Batched scan over (n_sets, L) set-partitioned padded streams.
+
+    Step j processes slot j of *every* set at once; the carry is each
+    set's ways-wide state.  Padding lanes (slot >= that set's count)
+    leave the state untouched and emit don't-care outputs.
+
+    Layout (built by :func:`_simulate_cache_set_parallel`):
+      packed    (n_sets, L) int64  ``line_addr * 2 + is_write`` per slot
+      counts    (n_sets,)   int32  events per set (defines valid lanes)
+
+    Only the (n_sets, L) padded shape reaches the jit, and L is quantized
+    to a power of two by the caller, so workload sweeps over many streams
+    reuse the XLA compile cache (the stream-order gather happens on the
+    host).
+
+    The step body is trimmed for XLA's per-op while-loop overhead (the
+    per-step tensors are tiny, so op count — not FLOPs — is the cost):
+
+      - tag and dirty bit live in one packed int64 carry
+        (``tag * 2 + dirty``, -2 = invalid way), so one masked-sum gather
+        serves tag compare, eviction address, and dirty bookkeeping;
+      - LRU uses a *unique* recency key ``clock * ways + way`` instead of
+        a raw clock, so the victim one-hot is a plain ``== min`` (no
+        argmin/cumsum): within a set the keys order touches exactly like
+        the scalar oracle's strictly-increasing clock, and the
+        untouched-way init keys 0..ways-1 reproduce argmin's
+        lowest-index tie-break.  Keys are int64, so the 2**31-access
+        wraparound of the old int32 LRU clock cannot occur;
+      - all four per-access outputs ride in one int64
+        (``(evict_addr + 1) << 3 | dirty_evict << 2 | fill << 1 | hit``),
+        returned in the (L, n_sets) slot layout.
+    """
+    n_sets, L = packed.shape
+    addr_p = packed >> 1
+    w_p = (packed & 1).astype(bool)
+    valid_p = (jax.lax.broadcasted_iota(jnp.int32, (n_sets, L), 1)
+               < counts[:, None])
+    alloc_ok_p = valid_p if write_allocate else (valid_p & ~w_p)
+
+    T0 = jnp.full((n_sets, ways), -2, jnp.int64)
+    key0 = jnp.broadcast_to(jnp.arange(ways, dtype=jnp.int64),
+                            (n_sets, ways))
+    way_iota = jnp.arange(ways, dtype=jnp.int64)
+
+    def step(state, inp):
+        T, key, clockw = state
+        addr, w, alloc_ok, valid = inp            # each (n_sets,)
+        match = (T >> 1) == addr[:, None]
+        raw_hit = match.any(1)
+        hit = raw_hit & valid
+        victim_oh = key == key.min(1, keepdims=True)
+        allocate = alloc_ok & (~raw_hit)
+
+        woh = jnp.where(raw_hit[:, None], match, victim_oh)
+        touched = hit | allocate
+        upd = woh & touched[:, None]
+        selv = (T * woh).sum(1)          # selected way's packed tag|dirty
+        cur_dirty = (selv & 1).astype(bool)
+        evict_addr = jnp.where(allocate & (selv >= 0), selv >> 1, -1)
+        evict_dirty = allocate & cur_dirty & (selv >= 0)
+        new_dirty = w | (cur_dirty & hit)
+        T = jnp.where(upd, (addr * 2 + new_dirty)[:, None], T)
+        key = jnp.where(upd, clockw + way_iota[None, :], key)
+
+        out = (((evict_addr + 1) << 3)
+               | (evict_dirty.astype(jnp.int64) << 2)
+               | (allocate.astype(jnp.int64) << 1)
+               | hit.astype(jnp.int64))
+        return (T, key, clockw + ways), out
+
+    init = (T0, key0, jnp.asarray(ways, jnp.int64))
+    _, out_p = jax.lax.scan(
+        step, init, (addr_p.T, w_p.T, alloc_ok_p.T, valid_p.T), unroll=2)
+    return out_p  # (L, n_sets)
+
+
+# Fall back to the scalar scan when the dense (n_sets, L) padded layout
+# would mostly hold padding: L is the *max* events per set, so a heavily
+# skewed stream (e.g. a stride that is a multiple of n_sets lines, landing
+# every access in one set) would cost O(n_sets * n) memory and a length-n
+# scan at width n_sets - strictly worse than the O(n) scalar oracle.  The
+# two are bit-for-bit identical, so the fallback is behaviorally invisible.
+_MAX_PAD_RATIO = 8
+
+
+def _simulate_cache_set_parallel(line_addr, is_write, n_sets, ways,
+                                 write_allocate):
+    """Set-parallel replay of one cache level; host in/out in stream order.
+
+    Partitions the stream by set index (stable, so each set keeps its
+    access order), simulates all sets concurrently, and gathers the
+    per-access outputs back.  Returns numpy (hit, fill, evict_addr,
+    evict_dirty) bit-for-bit identical to the scalar oracle's.  Streams
+    skewed enough that the set-partitioned layout is mostly padding run
+    through the scalar scan instead (same results, better complexity).
+    """
+    lines = np.asarray(line_addr, np.int64)
+    w = np.asarray(is_write, bool)
+    n = lines.shape[0]
+    if n == 0:
+        return (np.zeros(0, bool), np.zeros(0, bool),
+                np.zeros(0, np.int64), np.zeros(0, bool))
+    if int(lines.min()) < 0 or int(lines.max()) >= 2 ** 59:
+        raise OverflowError(
+            "cachesim line addresses must lie in [0, 2^59) "
+            f"(got [{int(lines.min())}, {int(lines.max())}]); that is "
+            "byte addresses below 2^66 at 128-byte lines")
+
+    set_dt = np.uint8 if n_sets <= 256 else np.uint32
+    set_idx = (lines % n_sets).astype(set_dt)
+    counts64 = np.bincount(set_idx, minlength=n_sets)
+    L = int(counts64.max())
+    if n_sets * L > max(_MAX_PAD_RATIO * n, 4096):
+        return _simulate_cache(lines, w, n_sets, ways, write_allocate)
+
+    # Round the padded width up to a power of two: the jitted scan is
+    # shape-specialized, so quantizing L makes workload sweeps reuse the
+    # XLA compile cache instead of recompiling per stream (the counts
+    # mask already neutralizes padding lanes, so results are unchanged).
+    L = 1 << (L - 1).bit_length()
+
+    order = np.argsort(set_idx, kind="stable")
+    counts = counts64.astype(np.int32)
+    starts = np.zeros(n_sets, np.int64)
+    starts[1:] = np.cumsum(counts64)[:-1]
+    rows = set_idx[order].astype(np.int64)
+    slots = np.arange(n, dtype=np.int64) - starts[rows]
+
+    packed = np.zeros((n_sets, L), np.int64)
+    packed[rows, slots] = lines[order] * 2 + w[order]
+    flat_pos = np.empty(n, np.int64)
+    flat_pos[order] = slots * n_sets + rows       # (L, n_sets) row-major
+
+    with enable_x64():
+        out_p = np.asarray(_simulate_cache_sets(
+            jnp.asarray(packed), jnp.asarray(counts),
+            ways, write_allocate))
+    out = out_p.reshape(-1)[flat_pos]             # back to stream order
+
+    return ((out & 1).astype(bool), ((out >> 1) & 1).astype(bool),
+            (out >> 3) - 1, ((out >> 2) & 1).astype(bool))
+
+
+def _simulate_level(lines, w, level: CacheConfig, write_allocate: bool,
+                    simulator: str):
+    """Dispatch one cache level to the selected simulator (host arrays)."""
+    if simulator == "set_parallel":
+        return _simulate_cache_set_parallel(
+            lines, w, level.n_sets, level.ways, write_allocate)
+    if simulator == "scalar":
+        return _simulate_cache(lines, w, level.n_sets, level.ways,
+                               write_allocate)
+    raise ValueError(
+        f"unknown simulator {simulator!r}; available: {SIMULATORS}")
 
 
 def simulate_hierarchy(
@@ -111,10 +310,8 @@ def simulate_hierarchy(
     lines = (np.asarray(byte_addr, np.int64) // cfg.l1.line_bytes)
     w = np.asarray(is_write, bool)
 
-    hit1, fill1, ev_addr, ev_dirty = (
-        np.asarray(x) for x in _simulate_cache(
-            jnp.asarray(lines), jnp.asarray(w),
-            cfg.l1.n_sets, cfg.l1.ways, cfg.write_allocate))
+    hit1, fill1, ev_addr, ev_dirty = _simulate_level(
+        lines, w, cfg.l1, cfg.write_allocate, cfg.simulator)
 
     # --- compose the L2 access stream, preserving time order -------------
     l2_t, l2_a, l2_w = [], [], []
@@ -139,14 +336,13 @@ def simulate_hierarchy(
     order = np.argsort(l2_t, kind="stable")
     l2_t, l2_a, l2_w = l2_t[order], l2_a[order], l2_w[order]
 
-    hit2 = np.asarray(_simulate_cache(
-        jnp.asarray(l2_a), jnp.asarray(l2_w),
-        cfg.l2.n_sets, cfg.l2.ways, cfg.write_allocate)[0])
+    hit2 = _simulate_level(
+        l2_a, l2_w, cfg.l2, cfg.write_allocate, cfg.simulator)[0]
 
     times = np.concatenate([t, l2_t])
     addrs = np.concatenate([lines, l2_a])
     writes = np.concatenate([w, l2_w])
-    hits = np.concatenate([hit1, hit2])
+    hits = np.concatenate([np.asarray(hit1), np.asarray(hit2)])
     subs = np.concatenate([np.zeros(len(t), np.int32),
                            np.ones(len(l2_t), np.int32)])
     order = np.argsort(times, kind="stable")
@@ -168,8 +364,10 @@ class CacheHierarchyBackend:
         (``sample=`` controls its line sampling).
 
     Config kwargs are the :class:`HierarchyConfig` fields (or pass
-    ``config=HierarchyConfig(...)``).  ``chunk_events=N`` streams the
-    hit-annotated trace to the frontend in N-event chunks.
+    ``config=HierarchyConfig(...)``); ``simulator="set_parallel"``
+    (default) or ``"scalar"`` picks the per-level replay implementation.
+    ``chunk_events=N`` streams the hit-annotated trace to the frontend in
+    N-event chunks.
     """
     name = "cachesim"
     mode = "cache"
@@ -189,7 +387,16 @@ class CacheHierarchyBackend:
             kernels = [k.__dict__ for k in sb.kernels]
         else:
             t, a, w = workload
+        if config is not None and cfg:
+            raise ValueError(
+                "pass either config=HierarchyConfig(...) or field kwargs "
+                f"({sorted(cfg)}), not both - the kwargs would be "
+                "silently ignored")
         hcfg = config if config is not None else HierarchyConfig(**cfg)
+        if hcfg.simulator not in SIMULATORS:
+            raise ValueError(
+                f"unknown simulator {hcfg.simulator!r}; "
+                f"available: {SIMULATORS}")
         trace = simulate_hierarchy(t, a, w, hcfg)
         if chunk_events:
             return ProfileResult(chunks=chunk_trace(trace, chunk_events),

@@ -29,7 +29,7 @@ import numpy as np
 from repro.core.frontend import SubpartitionStats
 from repro.core.trace import Trace
 
-_NEG = -(2 ** 31) + 1  # "no read yet" sentinel, matches extract_lifetimes
+from repro.core.lifetime import NO_READ_SENTINEL as _NEG  # "no read yet"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -186,10 +186,10 @@ class TraceAccumulator:
         s.t_max = tmax if s.t_max is None else max(s.t_max, tmax)
         s.addr_seen.update(np.unique(a_raw).tolist())
 
-        # match extract_lifetimes: int32 cycle/address arithmetic, stable
+        # match extract_lifetimes: int64 cycle/address arithmetic, stable
         # (addr, time) sort
-        t = t_raw.astype(np.int32)
-        a = a_raw.astype(np.int32)
+        t = t_raw.astype(np.int64)
+        a = a_raw.astype(np.int64)
         order = np.lexsort((t, a))
         t, a, w, h = t[order], a[order], w[order], h[order]
 

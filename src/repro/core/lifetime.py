@@ -20,13 +20,20 @@ kernel covering the same computation lives in ``repro.kernels.lifetime_scan``
 
 Outputs are *per-segment* arrays padded to ``n_events`` (a trace of N events
 has at most N lifetimes):
-  lifetime_cycles  i32   last-read - first-write (0 for orphans)
+  lifetime_cycles  i64   last-read - first-write (0 for orphans)
   n_reads          i32   reads observed within the lifetime
-  start_cycles     i32   cycle stamp of the initiating event
-  addr             i32   block address hosting the lifetime
+  start_cycles     i64   cycle stamp of the initiating event
+  addr             i64   block address hosting the lifetime
   valid            bool  segment exists (non-padding)
   orphan           bool  lifetime with zero reads (fetched/written, never
                          reused) - paper §7.1.6 "orphaned accesses"
+
+Cycle stamps and addresses are carried as **int64 end-to-end** (the trace
+schema stores them as int64): cycle counts past 2**31 (~2.1 s at 1 GHz,
+i.e. any multi-step streamed workload) and line addresses >= 2**31 are
+exact, not silently wrapped.  The extraction runs its jitted segment ops
+under a scoped ``jax.experimental.enable_x64`` so the 64-bit arithmetic
+survives jax's default 32-bit mode without flipping the global flag.
 """
 
 from __future__ import annotations
@@ -37,8 +44,13 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.experimental import enable_x64
 
 from repro.core.trace import Trace
+
+# "no read yet" sentinel: below any real int64 cycle stamp, with headroom
+# so segment arithmetic cannot overflow (repro.core.accumulate mirrors it).
+NO_READ_SENTINEL = -(2 ** 62)
 
 
 @jax.tree_util.register_dataclass
@@ -59,12 +71,11 @@ class LifetimeStats:
         return lt[v] / clock_hz
 
 
-@partial(jax.jit, static_argnames=("mode", "write_allocate"))
 def extract_lifetimes(
-    time_cycles: jnp.ndarray,
-    addr: jnp.ndarray,
-    is_write: jnp.ndarray,
-    hit: jnp.ndarray,
+    time_cycles,
+    addr,
+    is_write,
+    hit,
     mode: str = "scratchpad",
     write_allocate: bool = True,
 ) -> LifetimeStats:
@@ -72,10 +83,33 @@ def extract_lifetimes(
 
     mode: "scratchpad" (Def 4.2) or "cache" (Def 4.3).
     write_allocate: cache write-allocation policy ablation (§7.1.6).
+
+    Cycle stamps and addresses are promoted to int64 inside a scoped
+    x64 region, so values past 2**31 are exact (see module docstring).
     """
+    if mode not in ("scratchpad", "cache"):
+        raise ValueError(f"unknown mode {mode!r}")
+    with enable_x64():
+        return _extract_lifetimes(
+            jnp.asarray(np.asarray(time_cycles), jnp.int64),
+            jnp.asarray(np.asarray(addr), jnp.int64),
+            jnp.asarray(np.asarray(is_write), bool),
+            jnp.asarray(np.asarray(hit), bool),
+            mode=mode, write_allocate=write_allocate)
+
+
+@partial(jax.jit, static_argnames=("mode", "write_allocate"))
+def _extract_lifetimes(
+    time_cycles: jnp.ndarray,
+    addr: jnp.ndarray,
+    is_write: jnp.ndarray,
+    hit: jnp.ndarray,
+    mode: str = "scratchpad",
+    write_allocate: bool = True,
+) -> LifetimeStats:
     n = time_cycles.shape[0]
-    t = time_cycles.astype(jnp.int32)  # exact cycle arithmetic
-    a = addr.astype(jnp.int32)
+    t = time_cycles.astype(jnp.int64)  # exact cycle arithmetic
+    a = addr.astype(jnp.int64)
     w = is_write.astype(bool)
     h = hit.astype(bool)
 
@@ -106,7 +140,7 @@ def extract_lifetimes(
     seg_id = jnp.cumsum(boundary.astype(jnp.int32)) - 1
     seg_id = jnp.maximum(seg_id, 0)
 
-    neg = jnp.int32(-(2**31) + 1)
+    neg = jnp.asarray(NO_READ_SENTINEL, t.dtype)
     start = jax.ops.segment_min(t, seg_id, num_segments=n)
     last_read = jax.ops.segment_max(
         jnp.where(read_ok, t, neg), seg_id, num_segments=n)
@@ -141,10 +175,10 @@ def lifetimes_of_trace(
     write_allocate: bool = True,
 ) -> LifetimeStats:
     return extract_lifetimes(
-        jnp.asarray(np.asarray(trace.time_cycles), jnp.int32),
-        jnp.asarray(np.asarray(trace.addr)),
-        jnp.asarray(np.asarray(trace.is_write)),
-        jnp.asarray(np.asarray(trace.hit)),
+        trace.time_cycles,
+        trace.addr,
+        trace.is_write,
+        trace.hit,
         mode=mode,
         write_allocate=write_allocate,
     )

@@ -6,11 +6,17 @@ ifmap/filter/ofmap scratchpads, or TPU VMEM. Backends emit this format; the
 analytical frontend consumes it without knowing which backend produced it.
 
 Fields (all 1-D arrays of equal length ``n_events``):
-  time_cycles   int32   cycle stamp of the access (monotone per subpartition)
-  addr          int32   block-granular address (cache line / scratchpad word)
+  time_cycles   int64   cycle stamp of the access (monotone per subpartition)
+  addr          int64   block-granular address (cache line / scratchpad word)
   is_write      bool    store (True) vs load (False)
   hit           bool    cache hit status; always True for scratchpads
   subpartition  int32   which memory the access targets (index into names)
+
+``time_cycles`` and ``addr`` are int64 **by contract**: multi-step streamed
+workloads blow past 2**31 cycles (~2.1 s at 1 GHz) and line addresses of
+large address spaces exceed 2**31, so every consumer (the lifetime
+frontend, the streaming accumulator, the cache simulator) carries them at
+64 bits end-to-end rather than silently wrapping.
 
 Scalar metadata:
   clock_hz      float   clock used to convert cycles -> seconds
@@ -99,8 +105,23 @@ def concat_traces(traces: Sequence[Trace]) -> Trace:
     feeding the per-step traces to ``repro.core.accumulate.TraceAccumulator``
     (or ``ProfileSession.profile(..., chunk_events=...)``), which folds
     lifetime statistics chunk by chunk in bounded memory.
+
+    All inputs must agree on ``clock_hz``/``block_bits``/``names``:
+    concatenating traces from different clock domains or line geometries
+    would silently convert cycles with the wrong clock downstream.
     """
+    if not traces:
+        raise ValueError("concat_traces needs at least one trace")
     base = traces[0]
+    for i, tr in enumerate(traces[1:], start=1):
+        for field in ("clock_hz", "block_bits", "names"):
+            got, want = getattr(tr, field), getattr(base, field)
+            if field == "names":
+                got, want = tuple(got), tuple(want)
+            if got != want:
+                raise ValueError(
+                    f"concat_traces metadata mismatch: traces[{i}].{field} "
+                    f"= {got!r} != traces[0].{field} = {want!r}")
     return Trace(
         time_cycles=np.concatenate([np.asarray(t.time_cycles) for t in traces]),
         addr=np.concatenate([np.asarray(t.addr) for t in traces]),
@@ -121,10 +142,24 @@ def chunk_trace(trace: Trace, max_events: int):
     Because the split is along the (already time-ordered) event axis, each
     address's events stay time-ordered across chunks, which is exactly the
     contract ``TraceAccumulator.update`` needs for chunked analysis to
-    match the monolithic result.
+    match the monolithic result.  The input is checked for time
+    monotonicity eagerly (not at first iteration): an unsorted trace would
+    silently break the chunked-vs-monolithic equivalence guarantee.
     """
     if max_events <= 0:
         raise ValueError(f"max_events must be positive, got {max_events}")
+    t = np.asarray(trace.time_cycles)
+    if len(t) and not (np.diff(t) >= 0).all():
+        bad = int(np.argmax(np.diff(t) < 0))
+        raise ValueError(
+            "chunk_trace requires a time-sorted trace (chunked analysis "
+            "only matches the monolithic result when each address's events "
+            f"stay time-ordered across chunks); time_cycles decreases at "
+            f"event {bad + 1} ({int(t[bad])} -> {int(t[bad + 1])})")
+    return _chunk_trace_checked(trace, max_events)
+
+
+def _chunk_trace_checked(trace: Trace, max_events: int):
     n = trace.n_events
     for lo in range(0, max(n, 1), max_events):
         hi = min(lo + max_events, n)

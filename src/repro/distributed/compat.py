@@ -1,0 +1,66 @@
+"""JAX version-compatibility shims for the distributed layer.
+
+The distributed modules target the modern explicit-sharding API surface
+(``jax.shard_map``, ``jax.lax.pcast`` VMA casts, ``jax.sharding.AxisType``)
+but must also run on older jax releases where ``shard_map`` still lives in
+``jax.experimental`` and the VMA/axis-type machinery does not exist.  Every
+spot that touches one of those APIs goes through this module instead of
+using ``jax.*`` directly, so the version split lives in exactly one place.
+"""
+
+from __future__ import annotations
+
+import jax
+
+try:  # pre-jax.shard_map releases
+    from jax.experimental.shard_map import shard_map as _experimental_shard_map
+except ImportError:  # pragma: no cover - removed in very new jax
+    _experimental_shard_map = None
+
+
+def _has_vma() -> bool:
+    """One capability check drives both shims: VMA casts (``lax.pcast``)
+    exist exactly on the versions whose shard_map replication checker can
+    follow scan-carried ppermute values marked via pcast."""
+    return hasattr(jax.lax, "pcast")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs):
+    """``jax.shard_map`` on VMA-capable jax, else a spelling with the
+    replication checker disabled.
+
+    Pre-VMA versions cannot follow scan-carried ppermute values (there is
+    no :func:`pcast` to mark them varying), so their checker must be off;
+    the gate is the same `_has_vma` capability the pcast shim uses — a
+    version with top-level ``jax.shard_map`` but no VMA support still
+    takes the checker-off path.
+    """
+    if _has_vma():
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs)
+    sm = _experimental_shard_map or jax.shard_map
+    return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+              check_rep=False)
+
+
+def pcast(x, axes, to="varying"):
+    """VMA cast where supported; identity on jax versions without VMA
+    (where :func:`shard_map` runs with the replication checker off)."""
+    if _has_vma():
+        return jax.lax.pcast(x, axes, to=to)
+    return x
+
+
+def auto_axis_types(n: int):
+    """``(AxisType.Auto,) * n`` when the type exists, else None."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    return None if axis_type is None else (axis_type.Auto,) * n
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with Auto axis types when the jax version has them
+    (older releases have no ``axis_types`` kwarg and only Auto behavior)."""
+    types = auto_axis_types(len(axis_shapes))
+    if types is None:
+        return jax.make_mesh(axis_shapes, axis_names)
+    return jax.make_mesh(axis_shapes, axis_names, axis_types=types)

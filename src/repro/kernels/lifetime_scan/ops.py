@@ -63,8 +63,26 @@ def lifetime_histogram(time_cycles, addr, is_write, edges=None,
     """
     if edges is None:
         edges = default_edges()
-    t = jnp.asarray(time_cycles, jnp.int32)
-    a = jnp.asarray(addr, jnp.int32)
+    # The TPU kernel carries cycles/addresses in int32 SMEM/VMEM; unlike
+    # the int64 jnp frontend (repro.core.lifetime) it cannot widen, so
+    # out-of-range inputs fail loudly instead of silently wrapping.
+    t_np = np.asarray(time_cycles)
+    a_np = np.asarray(addr)
+    if t_np.size:
+        if int(t_np.min()) < -(2 ** 31) or int(t_np.max()) >= 2 ** 31:
+            raise OverflowError(
+                "lifetime_scan kernel is int32: time_cycles outside "
+                f"[-2^31, 2^31) (got [{int(t_np.min())}, "
+                f"{int(t_np.max())}]); rebase the trace or use "
+                "repro.core.lifetime (int64) instead")
+        if int(a_np.min()) < 0 or int(a_np.max()) >= SENTINEL:
+            raise OverflowError(
+                "lifetime_scan kernel is int32: addresses must lie in "
+                f"[0, {SENTINEL}) (got [{int(a_np.min())}, "
+                f"{int(a_np.max())}]); remap addresses or use "
+                "repro.core.lifetime (int64) instead")
+    t = jnp.asarray(t_np, jnp.int32)
+    a = jnp.asarray(a_np, jnp.int32)
     w = jnp.asarray(is_write, jnp.int32)
     if t.shape[0] == 0:
         return (jnp.zeros(len(edges) - 1, jnp.float32),

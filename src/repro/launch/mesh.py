@@ -8,16 +8,14 @@ from __future__ import annotations
 
 import jax
 
-
-def _auto(n):
-    return (jax.sharding.AxisType.Auto,) * n
+from repro.distributed.compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 = 256 chips per pod; 2 pods = 512 chips multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes, axis_types=_auto(len(shape)))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(preferred_model: int = 1):
@@ -25,4 +23,4 @@ def make_host_mesh(preferred_model: int = 1):
     from repro.runtime.elastic import choose_mesh_shape
     n = len(jax.devices())
     shape, names = choose_mesh_shape(n, preferred_model)
-    return jax.make_mesh(shape, names, axis_types=_auto(len(shape)))
+    return make_mesh(shape, names)

@@ -25,9 +25,9 @@ def _run(code: str, n_devices: int = 8):
 def test_pipeline_parallel_matches_sequential():
     _run("""
 import jax, jax.numpy as jnp
+from repro.distributed.compat import make_mesh
 from repro.distributed.pipeline import pipeline_forward
-mesh = jax.make_mesh((4,), ("stage",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("stage",))
 S, M, mb, d = 4, 6, 2, 8
 W = jax.random.normal(jax.random.PRNGKey(0), (S, d, d)) * 0.3
 xs = jax.random.normal(jax.random.PRNGKey(1), (M, mb, d))
@@ -46,9 +46,9 @@ def test_moe_local_dispatch_matches_global():
 import jax, jax.numpy as jnp, dataclasses
 from repro.configs import get_config
 from repro.distributed import sharding
+from repro.distributed.compat import make_mesh
 from repro.models import layers as L
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((2, 4), ("data", "model"))
 cfg = get_config("phi3_5_moe", smoke=True)
 p, _ = L.init_moe(jax.random.PRNGKey(0), cfg, jnp.float32)
 x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model))
@@ -73,9 +73,9 @@ from repro.configs.base import ShapeCell
 from repro.distributed import sharding
 from repro.launch.steps import (abstract_params, make_optimizer,
                                 make_train_step)
+from repro.distributed.compat import make_mesh
 from repro.models.api import batch_shardings, batch_specs, build
-mesh = jax.make_mesh((4, 2), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+mesh = make_mesh((4, 2), ("data", "model"))
 sharding.set_mesh(mesh)
 cfg = get_config("tinyllama_1_1b", smoke=True)
 api = build(cfg)
@@ -101,12 +101,12 @@ def test_compressed_psum_shard_map():
     _run("""
 import jax, jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
+from repro.distributed.compat import make_mesh, shard_map
 from repro.optim.compression import compressed_psum
-mesh = jax.make_mesh((4,), ("data",),
-                     axis_types=(jax.sharding.AxisType.Auto,))
+mesh = make_mesh((4,), ("data",))
 x = jnp.arange(32, dtype=jnp.float32).reshape(4, 8) / 13.0
-out = jax.shard_map(lambda b: compressed_psum(b, "data"), mesh=mesh,
-                    in_specs=P("data"), out_specs=P("data"))(x)
+out = shard_map(lambda b: compressed_psum(b, "data"), mesh=mesh,
+                in_specs=P("data"), out_specs=P("data"))(x)
 ref = jnp.tile(x.sum(0, keepdims=True) / 1.0, (4, 1)) * 0 + x.sum(0)
 # int8 quantization: tolerance = shared-scale resolution
 import numpy as np

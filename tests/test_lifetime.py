@@ -61,6 +61,7 @@ def test_no_write_allocate_drops_write_miss_segments():
     assert np.asarray(wa.valid).sum() > np.asarray(nwa.valid).sum()
 
 
+@pytest.mark.slow
 @settings(max_examples=40, deadline=None)
 @given(st.data())
 def test_lifetime_invariants(data):
@@ -93,6 +94,7 @@ def test_lifetime_invariants(data):
     assert nr.sum() == (~w).sum()
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2 ** 16))
 def test_energy_monotone_in_retention(seed):

@@ -1,0 +1,140 @@
+"""int64 end-to-end regression tests: cycle stamps past 2**31 and line
+addresses >= 2**31 must flow through the lifetime frontend, the streaming
+accumulator, and the cache simulator without wrapping (the old int32 hot
+path silently corrupted exactly the long MLPerf-scale streams the paper's
+headline numbers come from)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (TraceAccumulator, chunk_trace, lifetimes_of_trace,
+                        make_trace, short_lived_fraction)
+
+OFFSET = 2 ** 31 + 12345  # would wrap int32
+
+
+def _stream(n=400, n_addrs=16, seed=0):
+    rng = np.random.RandomState(seed)
+    t = np.sort(rng.randint(0, 100_000, n)).astype(np.int64)
+    a = rng.randint(0, n_addrs, n).astype(np.int64)
+    w = rng.rand(n) < 0.4
+    return t, a, w
+
+
+def _valid_stats(stats):
+    v = np.asarray(stats.valid)
+    return (sorted(np.asarray(stats.lifetime_cycles)[v].tolist()),
+            sorted(np.asarray(stats.n_reads)[v].tolist()),
+            int(np.asarray(stats.orphan)[v].sum()))
+
+
+def test_time_offset_past_2pow31_matches_rebased():
+    """Acceptance: a trace offset by 2**31+ has identical lifetime
+    statistics to its rebased-to-zero copy."""
+    t, a, w = _stream()
+    base = lifetimes_of_trace(make_trace(t, a, w))
+    shifted = lifetimes_of_trace(make_trace(t + OFFSET, a, w))
+    assert _valid_stats(base) == _valid_stats(shifted)
+    # start stamps carry the offset exactly (int64, not wrapped)
+    vb = np.asarray(base.valid)
+    vs = np.asarray(shifted.valid)
+    assert np.array_equal(
+        np.sort(np.asarray(shifted.start_cycles)[vs]),
+        np.sort(np.asarray(base.start_cycles)[vb]) + OFFSET)
+    assert np.asarray(shifted.start_cycles).dtype == np.int64
+
+
+def test_addresses_past_2pow31_do_not_alias():
+    """Addresses >= 2**31 must stay distinct (int32 wrap used to alias
+    them onto small addresses, merging unrelated lifetimes)."""
+    t, a, w = _stream()
+    base = lifetimes_of_trace(make_trace(t, a, w))
+    big = lifetimes_of_trace(make_trace(t, a + OFFSET, w))
+    assert _valid_stats(base) == _valid_stats(big)
+    vb = np.asarray(big.valid)
+    assert np.asarray(big.addr)[vb].min() >= OFFSET
+
+
+def test_int32_wrap_would_have_corrupted():
+    """Sanity: the regression is real - for a stream straddling the 2**31
+    cycle boundary (any workload running past ~2.1 s at 1 GHz), int32
+    truncation flips the time order and changes the answer, so the tests
+    above are not vacuous."""
+    t, a, w = _stream()
+    t_straddle = t + (2 ** 31 - 50_000)  # first half < 2**31, rest above
+    with np.errstate(over="ignore"):
+        wrapped = t_straddle.astype(np.int32).astype(np.int64)
+    exact_stats = lifetimes_of_trace(make_trace(t_straddle, a, w))
+    wrapped_stats = lifetimes_of_trace(make_trace(wrapped, a, w))
+    assert _valid_stats(exact_stats) != _valid_stats(wrapped_stats)
+
+
+def test_short_lived_fraction_with_offset_times():
+    t, a, w = _stream()
+    f0 = short_lived_fraction(
+        lifetimes_of_trace(make_trace(t, a, w)), 1e9, 1e-6)
+    f1 = short_lived_fraction(
+        lifetimes_of_trace(make_trace(t + OFFSET, a, w)), 1e9, 1e-6)
+    assert f0 == pytest.approx(f1)
+
+
+def test_accumulator_matches_monolithic_past_2pow31():
+    """Streaming fold (int64) stays bit-for-bit with the monolithic
+    frontend on a trace whose stamps and addresses exceed 2**31."""
+    t, a, w = _stream(n=600)
+    tr = make_trace(t + OFFSET, a + OFFSET, w)
+    mono = lifetimes_of_trace(tr)
+    acc = TraceAccumulator(mode="scratchpad")
+    for chunk in chunk_trace(tr, 97):
+        acc.update(chunk)
+    _, raw = acc.stats(0)
+    v = np.asarray(mono.valid)
+    assert sorted(raw.lifetime_cycles.tolist()) == \
+        sorted(np.asarray(mono.lifetime_cycles)[v].tolist())
+    assert sorted(raw.addr.tolist()) == \
+        sorted(np.asarray(mono.addr)[v].tolist())
+    assert raw.addr.min() >= OFFSET
+
+
+def test_cachesim_big_addresses_and_times():
+    """The cache backend carries int64: line addresses >= 2**31 and cycle
+    stamps >= 2**31 replay identically to their rebased twins."""
+    from repro.backends.cachesim import HierarchyConfig, simulate_hierarchy
+    rng = np.random.RandomState(3)
+    n = 2000
+    t = np.arange(n, dtype=np.int64)
+    byte_addr = (rng.randint(0, 4096, n) * 128).astype(np.int64)
+    w = rng.rand(n) < 0.3
+    # line addr = byte // 128; offset lines by 2**31+ via bytes
+    byte_off = (OFFSET * 128)
+    tr0 = simulate_hierarchy(t, byte_addr, w, HierarchyConfig())
+    tr1 = simulate_hierarchy(t + OFFSET, byte_addr + byte_off, w,
+                             HierarchyConfig())
+    assert np.asarray(tr1.addr).min() >= OFFSET
+    assert np.array_equal(np.asarray(tr0.hit), np.asarray(tr1.hit))
+    assert np.array_equal(np.asarray(tr0.is_write), np.asarray(tr1.is_write))
+    assert np.array_equal(np.asarray(tr1.time_cycles) - OFFSET,
+                          np.asarray(tr0.time_cycles))
+    assert np.array_equal(np.asarray(tr1.addr) - OFFSET,
+                          np.asarray(tr0.addr))
+
+
+def test_cachesim_address_overflow_guard():
+    from repro.backends.cachesim import _simulate_cache_set_parallel
+    with pytest.raises(OverflowError, match="2\\^59"):
+        _simulate_cache_set_parallel(
+            np.array([2 ** 60], np.int64), np.array([False]), 8, 2, True)
+
+
+def test_lifetime_scan_kernel_int32_guard():
+    """The Pallas kernel is genuinely 32-bit: out-of-range inputs raise a
+    clear error instead of silently wrapping."""
+    from repro.kernels.lifetime_scan.ops import lifetime_histogram
+    with pytest.raises(OverflowError, match="int32"):
+        lifetime_histogram(np.array([0, 2 ** 31], np.int64),
+                           np.array([1, 1], np.int64),
+                           np.array([1, 0], np.int64))
+    with pytest.raises(OverflowError, match="int32"):
+        lifetime_histogram(np.array([0, 1], np.int64),
+                           np.array([0, 2 ** 31 - 5], np.int64),
+                           np.array([1, 0], np.int64))

@@ -19,6 +19,7 @@ from repro.core import (DEFAULT_DEVICES, SRAM, compose, compute_stats,
 from repro.core.devices import DeviceModel
 
 
+@pytest.mark.slow
 @settings(max_examples=30, deadline=None)
 @given(st.data())
 def test_cache_simulator_invariants(data):
@@ -54,6 +55,7 @@ def test_cache_simulator_invariants(data):
                 assert hit[i]
 
 
+@pytest.mark.slow
 @settings(max_examples=25, deadline=None)
 @given(st.integers(0, 2 ** 16))
 def test_composer_never_worse_than_best_monolithic(seed):
@@ -82,6 +84,7 @@ def test_retention_monotone_in_write_freq(fw):
         assert r2 <= r1 + 1e-30
 
 
+@pytest.mark.slow
 @settings(max_examples=20, deadline=None)
 @given(st.integers(0, 2 ** 16))
 def test_lifetime_extraction_permutation_invariant(seed):

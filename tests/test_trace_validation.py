@@ -1,0 +1,59 @@
+"""Trace-schema guardrails: concat_traces metadata agreement and the
+chunk_trace time-sortedness contract."""
+
+import numpy as np
+import pytest
+
+from repro.core import chunk_trace, concat_traces, make_trace
+
+
+def _tr(**kw):
+    return make_trace([0, 5, 9], [1, 2, 1], [True, False, False], **kw)
+
+
+def test_concat_traces_same_metadata_ok():
+    out = concat_traces([_tr(), _tr()])
+    assert out.n_events == 6
+    assert out.clock_hz == _tr().clock_hz
+
+
+def test_concat_traces_clock_mismatch_raises():
+    with pytest.raises(ValueError, match="clock_hz"):
+        concat_traces([_tr(clock_hz=1e9), _tr(clock_hz=2e9)])
+
+
+def test_concat_traces_block_bits_mismatch_raises():
+    with pytest.raises(ValueError, match="block_bits"):
+        concat_traces([_tr(block_bits=1024), _tr(block_bits=256)])
+
+
+def test_concat_traces_names_mismatch_raises():
+    with pytest.raises(ValueError, match="names"):
+        concat_traces([_tr(names=("L1",)), _tr(names=("vmem",))])
+
+
+def test_concat_traces_empty_list_raises():
+    with pytest.raises(ValueError, match="at least one"):
+        concat_traces([])
+
+
+def test_chunk_trace_unsorted_raises_eagerly():
+    tr = make_trace([5, 3, 9], [1, 1, 1], [True, False, False])
+    # error at call time, not at first iteration
+    with pytest.raises(ValueError, match="time-sorted"):
+        chunk_trace(tr, 2)
+
+
+def test_chunk_trace_sorted_roundtrip():
+    tr = _tr()
+    chunks = list(chunk_trace(tr, 2))
+    assert [c.n_events for c in chunks] == [2, 1]
+    assert np.array_equal(
+        np.concatenate([np.asarray(c.time_cycles) for c in chunks]),
+        np.asarray(tr.time_cycles))
+
+
+def test_chunk_trace_empty_trace_yields_one_empty_chunk():
+    tr = make_trace([], [], [])
+    chunks = list(chunk_trace(tr, 4))
+    assert len(chunks) == 1 and chunks[0].n_events == 0
