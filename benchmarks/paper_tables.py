@@ -83,7 +83,6 @@ def table4_pka():
         # ground truth vs weighted-representative estimates
         st1 = compute_stats(trace, 0, mode="cache")
         full_lt = st1.lifetimes_s.mean() if len(st1.lifetimes_s) else 0
-        full_wf = st1.write_freq_hz
         full_e = device_report(st1, SI_GCRAM).active_energy_j
 
         # per-kernel lifetime stats from kernel-sliced traces

@@ -8,7 +8,6 @@ from __future__ import annotations
 
 import glob
 import json
-import os
 
 
 def load():
@@ -49,7 +48,6 @@ def dryrun_table(recs):
         hc = r.get("hlo_cost", {})
         mem = r.get("memory", {})
         coll = r.get("collectives", {})
-        chips = 512 if mesh == "2x16x16" else 256
         print(f"| {arch} | {shape} | {mesh} | ok | "
               f"{r['n_params'] / 1e9:.2f}B | {r.get('compile_s', 0):.0f} | "
               f"{fmt_b(mem.get('temp_size_in_bytes', 0))} | "

@@ -36,21 +36,20 @@ def pipeline_bench():
     return rows
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="table4|table6|table7|table8|table9|fig8|fig10|"
-                         "kernels|pipeline|cachesim")
-    args = ap.parse_args()
-
+def bench_registry() -> dict:
+    """name -> bench function, each returning CSV rows
+    (``name,us_per_call,derived``).  Shared with
+    ``benchmarks.regression`` (the CI regression gate)."""
     from benchmarks import paper_tables as pt
     from benchmarks.cachesim_bench import cachesim_bench
     from benchmarks.fig5_retention import fig5_retention
     from benchmarks.kernels_bench import kernels_bench
+    from benchmarks.sweep_bench import sweep_bench
 
-    benches = {
+    return {
         "pipeline": pipeline_bench,
         "cachesim": cachesim_bench,
+        "sweep": sweep_bench,
         "table4": pt.table4_pka,
         "fig5": fig5_retention,
         "table6": pt.table6_energy,
@@ -61,8 +60,17 @@ def main() -> None:
         "fig10": pt.fig10_dataflow,
         "kernels": kernels_bench,
     }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="table4|table6|table7|table8|table9|fig8|fig10|"
+                         "kernels|pipeline|cachesim|sweep")
+    args = ap.parse_args()
+
     rows = []
-    for name, fn in benches.items():
+    for name, fn in bench_registry().items():
         if args.only and name != args.only:
             continue
         rows.extend(fn())

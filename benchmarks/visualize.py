@@ -20,7 +20,7 @@ import numpy as np  # noqa: E402
 
 from repro.backends.systolic import SystolicConfig, simulate  # noqa: E402
 from repro.core import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM,  # noqa
-                        compute_stats, device_report, lifetimes_of_trace)
+                        compute_stats, device_report)
 
 
 def lifetime_histograms(out_dir: str):

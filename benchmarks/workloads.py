@@ -7,8 +7,6 @@ itself used 7-word prompts / 20-token generations for the same reason).
 
 from __future__ import annotations
 
-import numpy as np
-
 from repro.backends.opstream import (StreamBuilder, polybench_conv_ops,
                                      resnet_ops, transformer_ops)
 from repro.core import get_backend

@@ -6,6 +6,11 @@ Subcommands:
              emit the heterogeneous-memory report (see
              ``repro.launch.profile`` for flags; ``--dry-run`` runs a tiny
              built-in workload as a pipeline smoke test)
+  sweep      composition design-space sweep: evaluate a DeviceGrid of
+             candidate gain-cell device sets over every subpartition
+             (x cache geometries) and emit Pareto frontiers with the
+             all-SRAM anchor (see ``repro.launch.sweep`` for flags;
+             ``--out``/``--csv`` for JSON/CSV output)
   backends   list the registered profiling backends
 
 Examples::
@@ -13,6 +18,9 @@ Examples::
   PYTHONPATH=src python -m repro profile --backend systolic \
       --arch tinyllama_1_1b --dataflow ws --pe 128
   PYTHONPATH=src python -m repro profile --backend systolic --dry-run
+  PYTHONPATH=src python -m repro sweep --backend systolic --dry-run
+  PYTHONPATH=src python -m repro sweep --backend systolic \
+      --retention-scales 0.5,1,2,4 --csv sweep.csv
   PYTHONPATH=src python -m repro backends
 """
 
@@ -32,6 +40,10 @@ def main(argv=None) -> int:
     if cmd == "profile":
         from repro.launch.profile import main as profile_main
         profile_main(rest)
+        return 0
+    if cmd == "sweep":
+        from repro.launch.sweep import main as sweep_main
+        sweep_main(rest)
         return 0
     if cmd == "backends":
         from repro.core import available_backends, get_backend

@@ -284,8 +284,30 @@ class ProfileSession:
                 "devices": list(comp.devices),
                 "capacity_fractions": comp.capacity_fractions.tolist(),
                 "energy_vs_sram": comp.energy_vs_sram,
+                "area_vs_sram": comp.area_vs_sram,
             }
         return self
+
+    def sweep(self, grid=None, *, workers: int = 1,
+              vectorized: bool = True, attach: bool = True):
+        """Evaluate a composition design-space sweep over every analyzed
+        subpartition and return the :class:`repro.sweep.SweepResult`
+        (grid defaults to ``repro.sweep.DeviceGrid()``; auto-runs
+        ``analyze()`` if needed).
+
+        With ``attach=True`` the per-subpartition Pareto frontiers are
+        also recorded under ``report()["sweep"]``.
+        """
+        from repro.sweep import SweepRunner
+        self._require_analyzed()
+        runner = SweepRunner(grid, workers=workers, vectorized=vectorized)
+        result = runner.run_session(self)
+        if attach:
+            self._report["sweep"] = {
+                (sub if geom is None else f"{geom}/{sub}"):
+                frontier.asdict()
+                for (geom, sub), frontier in result.frontiers().items()}
+        return result
 
     def report(self, path: str | None = None) -> dict:
         """The JSON-serializable report; auto-runs analyze() if needed."""

@@ -38,13 +38,56 @@ class Composition:
     energy_j: float                     # hetero active energy (refresh-free)
     energy_vs_sram: float               # ratio over monolithic SRAM
     monolithic_energy_j: dict           # device -> monolithic energy (with refresh)
+    area_um2: float = 0.0               # hetero array area (capacity-weighted)
+    area_vs_sram: float = 1.0           # ratio over an all-SRAM array
 
     def summary(self) -> str:
         caps = " / ".join(
             f"{d}:{100 * c:.1f}%" for d, c in
             zip(self.devices, self.capacity_fractions))
         return (f"[{caps}] E={self.energy_j:.3e} J "
-                f"({100 * self.energy_vs_sram:.1f}% of SRAM)")
+                f"({100 * self.energy_vs_sram:.1f}% of SRAM), "
+                f"A={100 * self.area_vs_sram:.1f}% of SRAM")
+
+
+def _access_energy_fj(device: DeviceModel) -> float:
+    """Refresh-free per-bit access energy: compose()'s device ordering key
+    (shared with the sweep engine, whose bit-for-bit contract depends on
+    using the identical key)."""
+    return device.read_fj_per_bit + device.write_fj_per_bit
+
+
+def _per_address_max_lifetime_s(raw, clock_hz: float) -> np.ndarray:
+    """Per-address maximum lifetime in seconds — compose()'s capacity rule
+    (an address must live on a device covering its longest-lived value).
+    Shared with the sweep engine, which computes it once per subpartition
+    and reuses it across every candidate device set."""
+    valid = np.asarray(raw.valid)
+    addr = np.asarray(raw.addr)[valid]
+    lt_cyc = np.asarray(raw.lifetime_cycles)[valid]
+    order = np.argsort(addr, kind="stable")
+    addr_s, lt_s_sorted = addr[order], lt_cyc[order]
+    new = np.concatenate([[True], addr_s[1:] != addr_s[:-1]])
+    grp = np.cumsum(new) - 1
+    max_lt = np.zeros(grp[-1] + 1 if len(grp) else 0)
+    np.maximum.at(max_lt, grp, lt_s_sorted)
+    return max_lt / clock_hz
+
+
+def _area_accounting(
+    devs: Sequence[DeviceModel],
+    frac: np.ndarray,
+    capacity_bits: float,
+) -> tuple[float, float]:
+    """(area_um2, area_vs_sram) of a capacity-weighted hetero array.
+
+    The baseline is the in-set SRAM device, so an all-SRAM composition is
+    exactly 1.0 whatever the SRAM cell model in use.
+    """
+    areas = np.array([d.area_um2_per_bit for d in devs])
+    per_bit = float((frac * areas).sum())
+    sram_per_bit = next(d.area_um2_per_bit for d in devs if d.name == "SRAM")
+    return per_bit * capacity_bits, per_bit / sram_per_bit
 
 
 def _energy_per_lifetime_j(
@@ -78,10 +121,7 @@ def compose(
 
     # Order devices by refresh-free per-bit access energy (cheapest first);
     # SRAM (infinite retention) is always last resort.
-    def access_energy(d: DeviceModel) -> float:
-        return d.read_fj_per_bit + d.write_fj_per_bit
-
-    devs = sorted(devices, key=access_energy)
+    devs = sorted(devices, key=_access_energy_fj)
     retentions = np.array(
         [d.retention_at(stats.write_freq_hz) for d in devs])
 
@@ -93,12 +133,16 @@ def compose(
         frac[-1] = 1.0
         mono = {d.name: analyze_energy(stats, d)[0] for d in devices}
         sram_e = mono["SRAM"]
+        area_um2, area_ratio = _area_accounting(
+            devs, frac, stats.capacity_bits)
         return Composition(
             devices=tuple(d.name for d in devs),
             capacity_fractions=frac,
             energy_j=0.0,
             energy_vs_sram=0.0 / sram_e if sram_e > 0 else math.nan,
             monolithic_energy_j=mono,
+            area_um2=area_um2,
+            area_vs_sram=area_ratio,
         )
 
     # Per-lifetime assignment: first (cheapest) device that covers it.
@@ -118,16 +162,7 @@ def compose(
     # through the raw LifetimeStats when provided, else approximate with
     # per-lifetime bits (upper bound on footprint).
     if raw is not None:
-        valid = np.asarray(raw.valid)
-        addr = np.asarray(raw.addr)[valid]
-        lt_cyc = np.asarray(raw.lifetime_cycles)[valid]
-        order = np.argsort(addr, kind="stable")
-        addr_s, lt_s_sorted = addr[order], lt_cyc[order]
-        new = np.concatenate([[True], addr_s[1:] != addr_s[:-1]])
-        grp = np.cumsum(new) - 1
-        max_lt = np.zeros(grp[-1] + 1 if len(grp) else 0)
-        np.maximum.at(max_lt, grp, lt_s_sorted)
-        max_lt_s = max_lt / clock_hz
+        max_lt_s = _per_address_max_lifetime_s(raw, clock_hz)
         addr_fits = max_lt_s[None, :] <= retentions[:, None]
         addr_dev = np.argmax(addr_fits, axis=0)
         addr_dev = np.where(addr_fits.any(axis=0), addr_dev, len(devs) - 1)
@@ -144,6 +179,7 @@ def compose(
         e, _ = analyze_energy(stats, d)
         mono[d.name] = e
     sram_e = mono["SRAM"]
+    area_um2, area_ratio = _area_accounting(devs, frac, stats.capacity_bits)
 
     return Composition(
         devices=tuple(d.name for d in devs),
@@ -151,4 +187,6 @@ def compose(
         energy_j=energy,
         energy_vs_sram=energy / sram_e if sram_e > 0 else math.nan,
         monolithic_energy_j=mono,
+        area_um2=area_um2,
+        area_vs_sram=area_ratio,
     )

@@ -18,7 +18,6 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Callable
 
 import numpy as np
 
@@ -35,6 +34,15 @@ class DeviceModel:
     write_fj_per_bit: float
     retention_s: float  # base retention (inf for SRAM / long-term NVM)
     retention_knee_hz: float = math.inf  # write freq where retention degrades
+
+    @property
+    def area_vs_sram(self) -> float:
+        """Cell-area ratio over the N5 SRAM bit cell (paper Table 5)."""
+        return self.area_um2_per_bit / SRAM_AREA_UM2_PER_BIT
+
+    def area_um2(self, bits: float) -> float:
+        """Array area for a capacity of ``bits`` bits, in um^2."""
+        return self.area_um2_per_bit * bits
 
     def retention_at(self, write_freq_hz: float) -> float:
         """Retention time under a given write frequency (paper Fig. 5)."""

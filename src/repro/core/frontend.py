@@ -52,6 +52,7 @@ class DeviceReport:
     write_bits: float
     active_energy_j: float
     area_mm2: float
+    area_vs_sram: float
     retention_s: float
 
     def asdict(self):
@@ -143,6 +144,7 @@ def device_report(
         write_bits=float(stats.n_writes * stats.block_bits),
         active_energy_j=energy,
         area_mm2=analyze_area(stats, device),
+        area_vs_sram=device.area_vs_sram,
         retention_s=device.retention_at(stats.write_freq_hz),
     )
 

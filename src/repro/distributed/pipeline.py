@@ -19,8 +19,6 @@ shard_map, which JAX supports natively).
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P

@@ -25,7 +25,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro.configs.base import (ARCH_IDS, SHAPES, get_config,
                                 shape_applicable)

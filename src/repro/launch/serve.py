@@ -16,7 +16,7 @@ import numpy as np
 from repro.configs.base import ShapeCell, get_config
 from repro.distributed import sharding
 from repro.launch.mesh import make_host_mesh
-from repro.models.api import build, make_batch
+from repro.models.api import build
 
 
 def main(argv=None):

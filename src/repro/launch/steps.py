@@ -6,15 +6,12 @@ matches the real training/serving path exactly.
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, ShapeCell
-from repro.distributed.sharding import (BATCH, MODEL, SEQ, named_sharding,
-                                        tree_shardings)
-from repro.models.api import ModelApi, batch_shardings, batch_specs
+from repro.distributed.sharding import BATCH, MODEL, SEQ
+from repro.models.api import ModelApi, batch_specs
 from repro.optim import AdamW, compress_gradients, cosine_schedule
 
 

@@ -17,7 +17,6 @@ import os
 import time
 
 import jax
-import numpy as np
 
 from repro.checkpoint import CheckpointManager
 from repro.configs.base import ShapeCell, get_config

@@ -12,15 +12,13 @@
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.configs.base import ArchConfig, ShapeCell
-from repro.distributed.sharding import BATCH, MODEL
+from repro.distributed.sharding import BATCH
 
 
 @dataclasses.dataclass(frozen=True)

@@ -8,14 +8,11 @@ logits are never materialized.
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import BATCH, FSDP, MODEL, constrain
+from repro.distributed.sharding import BATCH, MODEL, constrain
 from repro.models import layers as L
 
 

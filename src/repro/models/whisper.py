@@ -15,7 +15,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig
-from repro.distributed.sharding import BATCH, FSDP, MODEL, constrain
+from repro.distributed.sharding import BATCH, MODEL, constrain
 from repro.models import layers as L
 
 MAX_DECODER_POS = 32768  # sized for the decode_32k assigned shape
@@ -61,8 +61,11 @@ def init_lm(key, cfg: ArchConfig):
     }
     _, es = enc_layer(jax.random.PRNGKey(0))
     _, ds = dec_layer(jax.random.PRNGKey(0))
-    lift = lambda t: (None,) + t
-    isleaf = lambda t: isinstance(t, tuple)
+    def lift(t):
+        return (None,) + t
+
+    def isleaf(t):
+        return isinstance(t, tuple)
     specs = {
         "embed": (None, MODEL),
         "enc_pos": (None, None),

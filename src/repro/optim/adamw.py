@@ -33,7 +33,8 @@ class AdamW:
     grad_clip: float = 1.0
 
     def init(self, params):
-        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        def f32(p):
+            return jnp.zeros(p.shape, jnp.float32)
         return {
             "step": jnp.zeros((), jnp.int32),
             "m": jax.tree.map(f32, params),

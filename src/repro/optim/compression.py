@@ -16,11 +16,8 @@ Two modes:
 
 from __future__ import annotations
 
-from functools import partial
-
 import jax
 import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
 
 
 def _quantize(g):

@@ -9,7 +9,6 @@ device_put with the new NamedShardings is the entire re-shard).
 
 from __future__ import annotations
 
-import math
 
 
 def choose_mesh_shape(n_devices: int, preferred_model: int = 16,

@@ -1,0 +1,28 @@
+"""Composition design-space sweep: grid x subpartitions -> Pareto curve.
+
+The paper's headline claim ("optimal StRAM memory compositions achieving
+up to 3x active energy and 4x area reductions") is an optimum over a
+device design space.  This package explores that space:
+
+  grid     - ``DeviceGrid``: candidate device sets from retention / area /
+             energy scaling axes + parametric Si<->Hybrid interpolation
+  runner   - ``SweepRunner``: batched ``compose()`` over grid x
+             subpartitions x cache geometries (vectorized lifetime-fit
+             assignment, thread-parallel outer loop)
+  pareto   - ``ParetoFrontier``: dominated-free (area, energy) curves
+             with the all-SRAM anchor
+
+Front doors: ``ProfileSession.sweep(...)`` and ``python -m repro sweep``.
+"""
+
+from repro.sweep.grid import (SRAM_ONLY_ID, Candidate, DeviceGrid,
+                              gain_cell)
+from repro.sweep.pareto import ParetoFrontier, dominates, pareto_frontier
+from repro.sweep.runner import (SweepPoint, SweepResult, SweepRunner,
+                                evaluate_candidates)
+
+__all__ = [
+    "SRAM_ONLY_ID", "Candidate", "DeviceGrid", "gain_cell",
+    "ParetoFrontier", "dominates", "pareto_frontier",
+    "SweepPoint", "SweepResult", "SweepRunner", "evaluate_candidates",
+]

@@ -1,0 +1,167 @@
+"""Design-space grid of candidate gain-cell device sets.
+
+The paper's headline numbers are an *optimum over a design space*: the 3x
+active-energy / 4x area reductions come from picking the best StRAM
+composition, not from one fixed device tuple.  Gain-cell compilers
+(OpenGCRAM, arXiv 2507.10849; the Gain Cell Memory Compiler line of work)
+expose that space as a continuum: transistor flavor, cell sizing, and
+refresh policy trade retention against area and access energy.
+
+``DeviceGrid`` models that continuum with four axes:
+
+  ``mixes``            parametric Si <-> Hybrid interpolation points
+                       ``t in [0, 1]``; ``t=0`` is exactly ``SI_GCRAM``,
+                       ``t=1`` exactly ``HYBRID_GCRAM``, interior points
+                       interpolate geometrically (area / energy /
+                       retention are log-linear across process flavors)
+  ``retention_scales`` multiplies retention (longer-retention cells, e.g.
+                       larger storage node -> pair with ``area_scales``)
+  ``area_scales``      multiplies the cell area
+  ``energy_scales``    multiplies read/write access energy
+
+Each grid point is a :class:`Candidate`: SRAM plus one gain-cell device
+per mix (``per_mix=False``, the default, puts *all* mixes in one device
+set — the composition chooses per datum; ``per_mix=True`` emits one
+candidate per single-flavor set instead).  ``include_sram_only`` adds the
+degenerate all-SRAM candidate — the Pareto anchor every frontier is
+normalized against.
+
+The default grid (``DeviceGrid()`` with ``include_sram_only=False``) has
+exactly one candidate whose device tuple is ``DEFAULT_DEVICES``
+bit-for-bit, so a degenerate sweep reproduces ``compose()`` unchanged
+(``tests/test_sweep.py`` locks this).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+from typing import Iterator, Sequence
+
+from repro.core.devices import HYBRID_GCRAM, SI_GCRAM, SRAM, DeviceModel
+
+SRAM_ONLY_ID = "sram-only"
+
+
+def _geo(a: float, b: float, t: float) -> float:
+    """Geometric interpolation a^(1-t) * b^t (log-linear)."""
+    return a ** (1.0 - t) * b ** t
+
+
+def gain_cell(
+    mix: float,
+    retention_scale: float = 1.0,
+    area_scale: float = 1.0,
+    energy_scale: float = 1.0,
+) -> DeviceModel:
+    """A parametric gain-cell device on the Si <-> Hybrid continuum.
+
+    ``mix=0`` with unit scales returns ``SI_GCRAM`` itself and ``mix=1``
+    returns ``HYBRID_GCRAM`` (exact objects, so degenerate grids reproduce
+    the paper's fixed device set bit-for-bit).  Interior mixes
+    interpolate area, access energy, and retention geometrically; the
+    write-frequency knee interpolates in ``1/knee`` space (Si has no
+    knee, so ``mix -> 0`` pushes the knee to infinity).
+    """
+    if not 0.0 <= mix <= 1.0:
+        raise ValueError(f"mix must be in [0, 1], got {mix}")
+    scales = (retention_scale, area_scale, energy_scale)
+    if any(s <= 0 for s in scales):
+        raise ValueError(f"scales must be positive, got {scales}")
+    if scales == (1.0, 1.0, 1.0):
+        if mix == 0.0:
+            return SI_GCRAM
+        if mix == 1.0:
+            return HYBRID_GCRAM
+    si, hy = SI_GCRAM, HYBRID_GCRAM
+    knee_hz = math.inf if mix == 0.0 else hy.retention_knee_hz / mix
+    return DeviceModel(
+        name=_gc_name(mix, retention_scale, area_scale, energy_scale),
+        area_um2_per_bit=_geo(si.area_um2_per_bit, hy.area_um2_per_bit,
+                              mix) * area_scale,
+        read_fj_per_bit=_geo(si.read_fj_per_bit, hy.read_fj_per_bit,
+                             mix) * energy_scale,
+        write_fj_per_bit=_geo(si.write_fj_per_bit, hy.write_fj_per_bit,
+                              mix) * energy_scale,
+        retention_s=_geo(si.retention_s, hy.retention_s,
+                         mix) * retention_scale,
+        retention_knee_hz=knee_hz,
+    )
+
+
+def _gc_name(mix, r, a, e) -> str:
+    return f"GC[m={mix:g},r={r:g},a={a:g},e={e:g}]"
+
+
+@dataclasses.dataclass(frozen=True)
+class Candidate:
+    """One design point: a device set plus the grid parameters behind it."""
+    cid: str
+    devices: tuple          # (SRAM, gain cells...), compose() input order
+    params: dict
+
+    def __post_init__(self):
+        if not any(d.name == "SRAM" for d in self.devices):
+            raise ValueError(
+                f"candidate {self.cid!r} has no SRAM baseline device")
+
+
+@dataclasses.dataclass(frozen=True)
+class DeviceGrid:
+    """Cartesian grid of candidate device sets (see module docstring)."""
+    mixes: tuple = (0.0, 1.0)
+    retention_scales: tuple = (1.0,)
+    area_scales: tuple = (1.0,)
+    energy_scales: tuple = (1.0,)
+    per_mix: bool = False
+    include_sram_only: bool = True
+
+    def __post_init__(self):
+        for axis in ("mixes", "retention_scales", "area_scales",
+                     "energy_scales"):
+            vals = tuple(float(v) for v in getattr(self, axis))
+            if not vals:
+                raise ValueError(f"DeviceGrid axis {axis!r} is empty")
+            object.__setattr__(self, axis, vals)
+
+    def __len__(self) -> int:
+        n = (len(self.retention_scales) * len(self.area_scales)
+             * len(self.energy_scales))
+        if self.per_mix:
+            n *= len(self.mixes)
+        return n + (1 if self.include_sram_only else 0)
+
+    def __iter__(self) -> Iterator[Candidate]:
+        return iter(self.candidates())
+
+    def candidates(self) -> tuple:
+        """All candidate device sets, in deterministic grid order."""
+        out = []
+        if self.include_sram_only:
+            out.append(Candidate(
+                cid=SRAM_ONLY_ID, devices=(SRAM,),
+                params={"sram_only": True}))
+        scale_axes = itertools.product(
+            self.retention_scales, self.area_scales, self.energy_scales)
+        for r, a, e in scale_axes:
+            if self.per_mix:
+                for m in self.mixes:
+                    out.append(self._candidate((m,), r, a, e))
+            else:
+                out.append(self._candidate(self.mixes, r, a, e))
+        return tuple(out)
+
+    def _candidate(self, mixes: Sequence[float], r, a, e) -> Candidate:
+        gcs = tuple(gain_cell(m, r, a, e) for m in mixes)
+        mix_tag = ",".join(f"{m:g}" for m in mixes)
+        return Candidate(
+            cid=f"m[{mix_tag}]_r{r:g}_a{a:g}_e{e:g}",
+            devices=(SRAM,) + gcs,
+            params={"mixes": tuple(mixes), "retention_scale": r,
+                    "area_scale": a, "energy_scale": e})
+
+    @classmethod
+    def default_point(cls) -> "DeviceGrid":
+        """The degenerate 1-point grid: exactly ``DEFAULT_DEVICES``."""
+        return cls(include_sram_only=False)

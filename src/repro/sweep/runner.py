@@ -1,0 +1,327 @@
+"""Sweep execution: evaluate ``compose()`` across a ``DeviceGrid``.
+
+Two evaluation paths produce bit-for-bit identical ``Composition``
+objects (``tests/test_sweep.py`` locks the equivalence against
+``repro.core.composer.compose`` itself):
+
+``vectorized`` (default)
+    The per-candidate work in ``compose()`` is dominated by three
+    things that do not actually depend on the candidate's devices: the
+    per-address max-lifetime grouping (an argsort over the raw
+    lifetimes), the lifetime-fit broadcast, and the monolithic
+    baselines of shared devices (SRAM appears in *every* candidate).
+    The batched path computes the address grouping once per
+    subpartition, evaluates the ``fits = lt <= retentions`` assignment
+    for **all** candidates in one NumPy broadcast (``[candidate,
+    device, lifetime]``, chunked to bound memory), and memoizes
+    monolithic baselines by device — only the float reductions that
+    define ``compose()``'s exact summation order remain per-candidate.
+
+``naive``
+    ``compose()`` in a Python loop over candidates.  Kept as the
+    differential oracle and as the benchmark baseline
+    (``python -m benchmarks.run --only sweep`` times both).
+
+The outer loop over subpartitions (and cache geometries, via
+:meth:`SweepRunner.run_geometries`) is thread-parallel under
+``workers > 1`` — the heavy NumPy reductions release the GIL.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from concurrent.futures import ThreadPoolExecutor
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.core.composer import (Composition, _access_energy_fj,
+                                 _area_accounting, _energy_per_lifetime_j,
+                                 _per_address_max_lifetime_s, compose)
+from repro.core.devices import DeviceModel
+from repro.core.frontend import SubpartitionStats, analyze_energy
+from repro.sweep.grid import Candidate, DeviceGrid
+from repro.sweep.pareto import ParetoFrontier, pareto_frontier
+
+# Cap on candidate-chunk broadcast size (bools): candidates x devices x
+# lifetimes per chunk.  256 MB of bool keeps the fit matrix cache-friendly
+# without limiting total grid size.
+_MAX_BROADCAST_ELEMS = 256 * 1024 * 1024
+
+
+@dataclasses.dataclass(frozen=True)
+class SweepPoint:
+    """One evaluated design point: candidate x subpartition [x geometry]."""
+    candidate: str
+    subpartition: str
+    composition: Composition
+    params: dict = dataclasses.field(default_factory=dict)
+    geometry: str | None = None
+
+    @property
+    def area_vs_sram(self) -> float:
+        return self.composition.area_vs_sram
+
+    @property
+    def energy_vs_sram(self) -> float:
+        return self.composition.energy_vs_sram
+
+    def asdict(self) -> dict:
+        comp = self.composition
+        return {
+            "candidate": self.candidate,
+            "subpartition": self.subpartition,
+            "geometry": self.geometry,
+            "area_vs_sram": comp.area_vs_sram,
+            "energy_vs_sram": comp.energy_vs_sram,
+            "area_um2": comp.area_um2,
+            "energy_j": comp.energy_j,
+            "devices": list(comp.devices),
+            "capacity_fractions": comp.capacity_fractions.tolist(),
+            "params": dict(self.params),
+        }
+
+
+@dataclasses.dataclass
+class SweepResult:
+    """All evaluated points plus Pareto reduction / export helpers."""
+    points: list
+
+    def __len__(self) -> int:
+        return len(self.points)
+
+    def groups(self) -> dict:
+        """Points keyed by (geometry, subpartition), insertion-ordered."""
+        out: dict = {}
+        for p in self.points:
+            out.setdefault((p.geometry, p.subpartition), []).append(p)
+        return out
+
+    def frontier(self, subpartition: str | None = None,
+                 geometry: str | None = None) -> ParetoFrontier:
+        """Pareto frontier over the selected points (all, by default)."""
+        pts = [p for p in self.points
+               if (subpartition is None or p.subpartition == subpartition)
+               and (geometry is None or p.geometry == geometry)]
+        return pareto_frontier(pts)
+
+    def frontiers(self) -> dict:
+        """One frontier per (geometry, subpartition) group."""
+        return {k: pareto_frontier(v) for k, v in self.groups().items()}
+
+    def to_json(self) -> dict:
+        entry = {}
+        for (geom, sub), frontier in self.frontiers().items():
+            key = sub if geom is None else f"{geom}/{sub}"
+            entry[key] = frontier.asdict()
+        return {"n_points": len(self.points),
+                "points": [p.asdict() for p in self.points],
+                "frontiers": entry}
+
+    def csv_rows(self) -> list:
+        """``geometry,subpartition,candidate,area_vs_sram,energy_vs_sram,
+        on_frontier,capacity_fractions`` rows (header included; fields
+        holding commas — candidate ids, capacity maps — are quoted)."""
+        import csv
+        import io
+        on_front = set()
+        for (geom, sub), fr in self.frontiers().items():
+            for p in fr.points:
+                on_front.add((geom, sub, p.candidate))
+        buf = io.StringIO()
+        w = csv.writer(buf, lineterminator="\n")
+        w.writerow(["geometry", "subpartition", "candidate",
+                    "area_vs_sram", "energy_vs_sram", "on_frontier",
+                    "capacity_fractions"])
+        for p in self.points:
+            caps = "|".join(
+                f"{d}:{c:.6g}" for d, c in
+                zip(p.composition.devices,
+                    p.composition.capacity_fractions))
+            front = (p.geometry, p.subpartition, p.candidate) in on_front
+            w.writerow([p.geometry or "", p.subpartition, p.candidate,
+                        f"{p.area_vs_sram:.9g}",
+                        f"{p.energy_vs_sram:.9g}", int(front), caps])
+        return buf.getvalue().splitlines()
+
+
+# ---------------------------------------------------------------------------
+# batched candidate evaluation
+# ---------------------------------------------------------------------------
+
+def evaluate_candidates(
+    candidates: Sequence[Candidate],
+    stats: SubpartitionStats,
+    raw=None,
+    clock_hz: float = 1.0e9,
+) -> list:
+    """``[compose(stats, raw, c.devices, clock_hz) for c in candidates]``
+    with the candidate loop batched (see module docstring).  Bit-for-bit
+    identical to calling ``compose()`` per candidate.
+
+    Candidates are processed in chunks end-to-end (fit broadcast and
+    reductions alike), so peak memory is bounded by
+    ``chunk x devices x lifetimes`` (~``_MAX_BROADCAST_ELEMS``) however
+    large the grid."""
+    candidates = list(candidates)
+    if not candidates:
+        return []
+    lt = stats.lifetimes_s
+    if len(lt) == 0:
+        # Degenerate subpartition: compose()'s empty branch is already
+        # O(devices), nothing to batch.
+        return [compose(stats, raw=raw, devices=c.devices,
+                        clock_hz=clock_hz) for c in candidates]
+
+    bits = stats.lifetime_bits
+    reads = stats.accesses_per_lifetime - 1.0
+    if raw is not None:
+        max_lt_s = _per_address_max_lifetime_s(raw, clock_hz)
+    else:
+        max_lt_s = None
+        w = bits / bits.sum()
+
+    # Monolithic baselines depend on (stats, device); within this one
+    # subpartition they are memoized by device — SRAM is shared by every
+    # candidate, scale variants recur across mixes.
+    mono_cache: dict = {}
+
+    def mono_energy(d: DeviceModel) -> float:
+        if d not in mono_cache:
+            mono_cache[d] = analyze_energy(stats, d)[0]
+        return mono_cache[d]
+
+    sorted_devs = [sorted(c.devices, key=_access_energy_fj)
+                   for c in candidates]
+    n_dev = np.array([len(ds) for ds in sorted_devs])
+    d_max = int(n_dev.max())
+
+    # Padded retention matrix ([candidate, device], small): -inf rows
+    # never fit, so padded device slots are transparent to the argmax.
+    ret = np.full((len(candidates), d_max), -np.inf)
+    for ci, devs in enumerate(sorted_devs):
+        ret[ci, :len(devs)] = [d.retention_at(stats.write_freq_hz)
+                               for d in devs]
+    fallback = (n_dev - 1)[:, None]
+
+    chunk = max(1, _MAX_BROADCAST_ELEMS // max(1, d_max * len(lt)))
+    out = []
+    for lo in range(0, len(candidates), chunk):
+        hi = min(lo + chunk, len(candidates))
+        fits = lt[None, None, :] <= ret[lo:hi, :, None]   # [c, dev, lt]
+        first_fit = np.where(fits.any(axis=1),
+                             np.argmax(fits, axis=1), fallback[lo:hi])
+        if max_lt_s is not None:
+            afits = max_lt_s[None, None, :] <= ret[lo:hi, :, None]
+            addr_dev = np.where(afits.any(axis=1),
+                                np.argmax(afits, axis=1), fallback[lo:hi])
+        for ci in range(lo, hi):
+            cand, devs = candidates[ci], sorted_devs[ci]
+            ff = first_fit[ci - lo]
+            # compose()'s exact float accumulation order: per-device
+            # masked sums, accumulated cheapest-device first.
+            energy = 0.0
+            for i, d in enumerate(devs):
+                sel = ff == i
+                energy += float(_energy_per_lifetime_j(
+                    d, reads[sel], bits[sel]).sum())
+            if max_lt_s is not None:
+                ad = addr_dev[ci - lo]
+                frac = np.array(
+                    [np.mean(ad == i) for i in range(len(devs))])
+            else:
+                frac = np.array(
+                    [w[ff == i].sum() for i in range(len(devs))])
+            mono = {d.name: mono_energy(d) for d in cand.devices}
+            sram_e = mono["SRAM"]
+            area_um2, area_ratio = _area_accounting(
+                devs, frac, stats.capacity_bits)
+            out.append(Composition(
+                devices=tuple(d.name for d in devs),
+                capacity_fractions=frac,
+                energy_j=energy,
+                energy_vs_sram=energy / sram_e if sram_e > 0 else np.nan,
+                monolithic_energy_j=mono,
+                area_um2=area_um2,
+                area_vs_sram=area_ratio,
+            ))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# SweepRunner
+# ---------------------------------------------------------------------------
+
+class SweepRunner:
+    """Evaluate a ``DeviceGrid`` over subpartitions (x cache geometries).
+
+    ``workers > 1`` thread-parallelizes the outer (subpartition /
+    geometry) loop; results are returned in deterministic submission
+    order regardless of completion order.
+    """
+
+    def __init__(self, grid: DeviceGrid | None = None, *,
+                 workers: int = 1, vectorized: bool = True):
+        self.grid = grid if grid is not None else DeviceGrid()
+        self.workers = max(1, int(workers))
+        self.vectorized = vectorized
+
+    # -- one subpartition ------------------------------------------------
+    def run_stats(self, stats: SubpartitionStats, raw=None, *,
+                  clock_hz: float = 1.0e9,
+                  subpartition: str | None = None,
+                  geometry: str | None = None) -> list:
+        cands = self.grid.candidates()
+        if self.vectorized:
+            comps = evaluate_candidates(cands, stats, raw=raw,
+                                        clock_hz=clock_hz)
+        else:
+            comps = [compose(stats, raw=raw, devices=c.devices,
+                             clock_hz=clock_hz) for c in cands]
+        name = subpartition if subpartition is not None else stats.name
+        return [SweepPoint(candidate=c.cid, subpartition=name,
+                           composition=comp, params=c.params,
+                           geometry=geometry)
+                for c, comp in zip(cands, comps)]
+
+    # -- all subpartitions of an analyzed session ------------------------
+    def run_session(self, session, *, geometry: str | None = None,
+                    ) -> SweepResult:
+        """Sweep every analyzed subpartition of a ``ProfileSession``."""
+        session._require_analyzed()
+        tasks = [(name, st, raw) for name, (st, raw)
+                 in session._stats.items()]
+        clock = session._clock_hz or 1.0e9
+
+        def one(item):
+            name, st, raw = item
+            return self.run_stats(st, raw, clock_hz=clock,
+                                  subpartition=name, geometry=geometry)
+
+        return SweepResult(points=self._map(one, tasks))
+
+    # -- grid x geometries ----------------------------------------------
+    def run_geometries(self, backend: str, workload,
+                       geometries: Mapping[str, Mapping], *,
+                       devices=None, **base_cfg) -> SweepResult:
+        """Re-profile ``workload`` once per geometry (label -> backend
+        config overrides) and sweep the grid over each result."""
+        from repro.core.api import ProfileSession
+
+        def one(item):
+            label, cfg = item
+            session = ProfileSession(backend, devices=devices)
+            session.profile(workload, **{**base_cfg, **dict(cfg)})
+            session.analyze()
+            return self.run_session(session, geometry=label).points
+
+        return SweepResult(points=self._map(one, list(geometries.items())))
+
+    # -- parallel map preserving submission order ------------------------
+    def _map(self, fn, items) -> list:
+        if self.workers == 1 or len(items) <= 1:
+            chunks = [fn(it) for it in items]
+        else:
+            with ThreadPoolExecutor(max_workers=self.workers) as pool:
+                chunks = list(pool.map(fn, items))
+        return [p for chunk in chunks for p in chunk]

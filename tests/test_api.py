@@ -79,6 +79,7 @@ def _handwired_report(trace, kernels, mode):
             "devices": list(comp.devices),
             "capacity_fractions": comp.capacity_fractions.tolist(),
             "energy_vs_sram": comp.energy_vs_sram,
+            "area_vs_sram": comp.area_vs_sram,
         }
     return report
 

@@ -4,16 +4,15 @@ op-stream generation, TPU jaxpr backend."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 from repro.backends.cachesim import (CacheConfig, HierarchyConfig,
                                      simulate_hierarchy, _simulate_cache)
 from repro.backends.opstream import (StreamBuilder, polybench_conv_ops,
-                                     resnet_ops, transformer_ops)
+                                     transformer_ops)
 from repro.backends.systolic import (GemmLayer, SystolicConfig,
                                      conv_as_gemm, simulate, IFMAP,
                                      FILTER, OFMAP)
-from repro.core import compute_stats, lifetimes_of_trace
+from repro.core import compute_stats
 
 
 # ---------------------------------------------------------------------------

@@ -8,7 +8,6 @@ import numpy as np
 import pytest
 
 from repro.backends.cachesim import (CacheConfig, HierarchyConfig,
-                                     _simulate_cache,
                                      _simulate_cache_set_parallel,
                                      _simulate_level, simulate_hierarchy)
 

@@ -10,11 +10,11 @@ pytest.importorskip(
            "requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st  # noqa: E402
 
-from repro.core import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM, SRAM,
+from repro.core import (HYBRID_GCRAM, SI_GCRAM, SRAM,
                         analyze_trace, compose, compute_stats,
                         energy_ratio_vs_sram, lifetimes_of_trace,
-                        make_trace, orphaned_access_fraction,
-                        select_kernels, short_lived_fraction)
+                        make_trace, select_kernels,
+                        short_lived_fraction)
 
 
 def test_single_lifetime():
@@ -104,7 +104,6 @@ def test_energy_monotone_in_retention(seed):
     a = rng.randint(0, 16, n)
     w = rng.rand(n) < 0.3
     tr = make_trace(t, a, w)
-    stats = compute_stats(tr, 0)
     # refresh-free device energy ratio must equal the per-bit ratio
     rep = analyze_trace(tr)
     ratio = energy_ratio_vs_sram(rep, "mem", "Si-GCRAM")

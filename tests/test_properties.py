@@ -16,8 +16,6 @@ import jax.numpy as jnp
 from repro.backends.cachesim import _simulate_cache
 from repro.core import (DEFAULT_DEVICES, SRAM, compose, compute_stats,
                         lifetimes_of_trace, make_trace)
-from repro.core.devices import DeviceModel
-
 
 @pytest.mark.slow
 @settings(max_examples=30, deadline=None)

@@ -1,0 +1,315 @@
+"""Tests for the composition design-space sweep engine.
+
+The locked contracts:
+  - a degenerate 1-point grid reproduces ``compose()`` on
+    ``DEFAULT_DEVICES`` bit-for-bit (batched and naive paths);
+  - batched == naive on arbitrary grids;
+  - Pareto output is deterministic, dominated-point-free, and carries
+    the all-SRAM anchor with ``area_vs_sram == 1.0`` exactly.
+"""
+
+import json
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.backends.systolic import GemmLayer
+from repro.core import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM, SRAM,
+                        ProfileSession, compose, compute_stats,
+                        lifetimes_of_trace, make_trace)
+from repro.sweep import (SRAM_ONLY_ID, Candidate, DeviceGrid, SweepRunner,
+                         dominates, gain_cell, pareto_frontier)
+
+
+@pytest.fixture(scope="module")
+def analyzed_session():
+    s = ProfileSession("systolic")
+    s.profile([GemmLayer("a", 48, 64, 64), GemmLayer("b", 32, 48, 96)],
+              rows=32, cols=32, dataflow="ws").analyze()
+    return s
+
+
+def _assert_compositions_identical(got, ref):
+    assert got.devices == ref.devices
+    assert np.array_equal(got.capacity_fractions, ref.capacity_fractions)
+    assert got.energy_j == ref.energy_j
+    assert got.energy_vs_sram == ref.energy_vs_sram
+    assert got.monolithic_energy_j == ref.monolithic_energy_j
+    assert got.area_um2 == ref.area_um2
+    assert got.area_vs_sram == ref.area_vs_sram
+
+
+# ---------------------------------------------------------------------------
+# DeviceGrid / gain_cell
+# ---------------------------------------------------------------------------
+
+def test_default_point_grid_is_default_devices():
+    grid = DeviceGrid.default_point()
+    assert len(grid) == 1
+    (cand,) = grid.candidates()
+    assert cand.devices == tuple(DEFAULT_DEVICES)
+
+
+def test_gain_cell_endpoints_are_exact_paper_devices():
+    assert gain_cell(0.0) is SI_GCRAM
+    assert gain_cell(1.0) is HYBRID_GCRAM
+
+
+def test_gain_cell_interpolation_is_monotone_and_bounded():
+    mid = gain_cell(0.5)
+    lo, hi = sorted([SI_GCRAM.area_um2_per_bit,
+                     HYBRID_GCRAM.area_um2_per_bit])
+    assert lo < mid.area_um2_per_bit < hi
+    assert (SI_GCRAM.retention_s < mid.retention_s
+            < HYBRID_GCRAM.retention_s)
+    assert (SI_GCRAM.read_fj_per_bit < mid.read_fj_per_bit
+            < HYBRID_GCRAM.read_fj_per_bit)
+    # knee interpolates in 1/knee space: finite for any mix > 0
+    assert np.isfinite(mid.retention_knee_hz)
+    assert mid.retention_knee_hz > HYBRID_GCRAM.retention_knee_hz
+
+
+def test_gain_cell_scales_apply():
+    d = gain_cell(0.0, retention_scale=2.0, area_scale=0.5,
+                  energy_scale=3.0)
+    assert d.retention_s == pytest.approx(2 * SI_GCRAM.retention_s)
+    assert d.area_um2_per_bit == pytest.approx(
+        0.5 * SI_GCRAM.area_um2_per_bit)
+    assert d.read_fj_per_bit == pytest.approx(3 * SI_GCRAM.read_fj_per_bit)
+
+
+def test_gain_cell_validation():
+    with pytest.raises(ValueError, match="mix"):
+        gain_cell(1.5)
+    with pytest.raises(ValueError, match="scales"):
+        gain_cell(0.5, retention_scale=0.0)
+
+
+def test_candidate_requires_sram():
+    with pytest.raises(ValueError, match="SRAM"):
+        Candidate(cid="bad", devices=(SI_GCRAM,), params={})
+
+
+def test_grid_axes_must_be_nonempty():
+    with pytest.raises(ValueError, match="mixes"):
+        DeviceGrid(mixes=())
+
+
+def test_grid_size_and_anchor():
+    grid = DeviceGrid(mixes=(0.0, 1.0), retention_scales=(0.5, 1.0, 2.0),
+                      per_mix=True)
+    assert len(grid) == 2 * 3 + 1
+    cands = grid.candidates()
+    assert cands[0].cid == SRAM_ONLY_ID
+    assert cands[0].devices == (SRAM,)
+    assert len(cands) == len(grid)
+    assert len({c.cid for c in cands}) == len(cands)  # ids unique
+
+
+# ---------------------------------------------------------------------------
+# degenerate sweep == compose() bit-for-bit
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("vectorized", [True, False])
+def test_degenerate_sweep_reproduces_compose(analyzed_session, vectorized):
+    s = analyzed_session
+    grid = DeviceGrid.default_point()
+    runner = SweepRunner(grid, vectorized=vectorized)
+    for name, (st, raw) in s._stats.items():
+        ref = compose(st, raw=raw, devices=DEFAULT_DEVICES,
+                      clock_hz=s._clock_hz)
+        (pt,) = runner.run_stats(st, raw, clock_hz=s._clock_hz)
+        _assert_compositions_identical(pt.composition, ref)
+
+
+def test_batched_equals_naive_on_wide_grid(analyzed_session):
+    s = analyzed_session
+    grid = DeviceGrid(mixes=(0.0, 0.25, 0.5, 1.0),
+                      retention_scales=(0.25, 1.0, 4.0),
+                      area_scales=(0.9, 1.0),
+                      energy_scales=(0.8, 1.0),
+                      per_mix=True)
+    for name, (st, raw) in s._stats.items():
+        vec = SweepRunner(grid).run_stats(st, raw, clock_hz=s._clock_hz)
+        naive = SweepRunner(grid, vectorized=False).run_stats(
+            st, raw, clock_hz=s._clock_hz)
+        assert len(vec) == len(naive) == len(grid)
+        for pv, pn in zip(vec, naive):
+            assert pv.candidate == pn.candidate
+            _assert_compositions_identical(pv.composition, pn.composition)
+
+
+def test_sweep_without_raw_matches_compose(analyzed_session):
+    # bits-weighted capacity fallback (raw=None) must also be identical
+    s = analyzed_session
+    st, _ = next(iter(s._stats.values()))
+    grid = DeviceGrid(retention_scales=(0.5, 1.0))
+    for cand, pt in zip(grid.candidates(),
+                        SweepRunner(grid).run_stats(
+                            st, None, clock_hz=s._clock_hz)):
+        ref = compose(st, raw=None, devices=cand.devices,
+                      clock_hz=s._clock_hz)
+        _assert_compositions_identical(pt.composition, ref)
+
+
+def test_sweep_empty_trace_matches_compose_empty_branch():
+    tr = make_trace([0, 5], [1, 1], [True, True], hit=[False, False])
+    st = compute_stats(tr, 0, mode="cache", write_allocate=False)
+    raw = lifetimes_of_trace(tr.select(0), mode="cache",
+                             write_allocate=False)
+    assert len(st.lifetimes_s) == 0
+    grid = DeviceGrid()
+    pts = SweepRunner(grid).run_stats(st, raw, clock_hz=tr.clock_hz)
+    for cand, pt in zip(grid.candidates(), pts):
+        ref = compose(st, raw=raw, devices=cand.devices,
+                      clock_hz=tr.clock_hz)
+        _assert_compositions_identical(pt.composition, ref)
+
+
+# ---------------------------------------------------------------------------
+# Pareto frontier
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def sweep_points(analyzed_session):
+    grid = DeviceGrid(mixes=(0.0, 0.5, 1.0),
+                      retention_scales=(0.5, 1.0, 2.0),
+                      energy_scales=(0.9, 1.0), per_mix=True)
+    return SweepRunner(grid).run_session(analyzed_session).points
+
+
+def test_pareto_is_dominated_free(sweep_points):
+    fr = pareto_frontier(
+        [p for p in sweep_points if p.subpartition == "ifmap"])
+    for p in fr.points:
+        for q in fr.points:
+            assert not dominates(p, q) or p is q
+            assert not dominates(p, q)
+
+
+def test_pareto_is_deterministic(sweep_points):
+    pts = [p for p in sweep_points if p.subpartition == "ifmap"]
+    fr1 = pareto_frontier(pts)
+    fr2 = pareto_frontier(list(reversed(pts)))
+    rng = np.random.RandomState(0)
+    shuffled = list(pts)
+    rng.shuffle(shuffled)
+    fr3 = pareto_frontier(shuffled)
+    ids = [p.candidate for p in fr1.points]
+    assert ids == [p.candidate for p in fr2.points]
+    assert ids == [p.candidate for p in fr3.points]
+
+
+def test_pareto_frontier_sorted_by_area(sweep_points):
+    fr = pareto_frontier(
+        [p for p in sweep_points if p.subpartition == "filter"])
+    areas = [p.area_vs_sram for p in fr.points]
+    energies = [p.energy_vs_sram for p in fr.points]
+    assert areas == sorted(areas)
+    assert energies == sorted(energies, reverse=True)
+
+
+def test_pareto_includes_all_sram_anchor(sweep_points):
+    for sub in ("ifmap", "filter", "ofmap"):
+        fr = pareto_frontier(
+            [p for p in sweep_points if p.subpartition == sub])
+        assert fr.anchor is not None
+        assert fr.anchor.candidate == SRAM_ONLY_ID
+        assert fr.anchor.area_vs_sram == 1.0          # exact, by contract
+        assert fr.anchor.composition.devices == ("SRAM",)
+        assert fr.anchor.composition.capacity_fractions[0] == 1.0
+        assert fr.anchor.asdict() in [p["anchor"] for p in [fr.asdict()]]
+
+
+def test_pareto_counts(sweep_points):
+    pts = [p for p in sweep_points if p.subpartition == "ifmap"]
+    fr = pareto_frontier(pts)
+    assert fr.n_total == len(pts)
+    assert fr.n_dominated == len(pts) - len(fr.points)
+    assert fr.best_area() is fr.points[0]
+    assert fr.best_energy() is fr.points[-1]
+
+
+# ---------------------------------------------------------------------------
+# session integration, parallelism, exports
+# ---------------------------------------------------------------------------
+
+def test_session_sweep_attaches_frontiers(analyzed_session):
+    res = analyzed_session.sweep(DeviceGrid())
+    report = analyzed_session.report()
+    assert set(report["sweep"]) == {"ifmap", "filter", "ofmap"}
+    for entry in report["sweep"].values():
+        assert entry["anchor"]["area_vs_sram"] == 1.0
+        assert entry["n_total"] == len(DeviceGrid())
+    json.dumps(report)  # report stays JSON-serializable
+    assert len(res) == len(DeviceGrid()) * 3
+
+
+def test_sweep_workers_deterministic(analyzed_session):
+    grid = DeviceGrid(retention_scales=(0.5, 1.0, 2.0))
+    serial = SweepRunner(grid, workers=1).run_session(analyzed_session)
+    threaded = SweepRunner(grid, workers=4).run_session(analyzed_session)
+    assert len(serial) == len(threaded)
+    for ps, pt_ in zip(serial.points, threaded.points):
+        assert (ps.candidate, ps.subpartition) == (pt_.candidate,
+                                                   pt_.subpartition)
+        _assert_compositions_identical(ps.composition, pt_.composition)
+
+
+def test_sweep_result_exports(analyzed_session):
+    res = SweepRunner(DeviceGrid()).run_session(analyzed_session)
+    blob = res.to_json()
+    json.dumps(blob)
+    assert blob["n_points"] == len(res)
+    assert set(blob["frontiers"]) == {"ifmap", "filter", "ofmap"}
+    rows = res.csv_rows()
+    assert rows[0].startswith("geometry,subpartition,candidate,")
+    assert len(rows) == len(res) + 1
+    # every frontier candidate is flagged on_frontier=1 in the CSV
+    import csv
+    parsed = list(csv.reader(rows[1:]))
+    assert all(len(r) == 7 for r in parsed)  # comma-safe quoting
+    flagged = {(r[1], r[2]) for r in parsed if r[5] == "1"}
+    expect = {(sub, p.candidate)
+              for (geom, sub), fr in res.frontiers().items()
+              for p in fr.points}
+    assert flagged == expect
+
+
+def test_run_geometries_tags_points():
+    def program(sb):
+        from repro.backends.opstream import transformer_ops
+        transformer_ops(sb, d_model=32, n_heads=2, kv_heads=2, d_ff=64,
+                        seq=8, n_layers=1)
+
+    from repro.backends.cachesim import CacheConfig
+    grid = DeviceGrid()
+    res = SweepRunner(grid, workers=2).run_geometries(
+        "cachesim", program,
+        {"small": {"l1": CacheConfig(size_kb=16, ways=2)},
+         "big": {"l1": CacheConfig(size_kb=64, ways=4)}})
+    geoms = {p.geometry for p in res.points}
+    assert geoms == {"small", "big"}
+    keys = set(res.frontiers())
+    assert ("small", "L1") in keys and ("big", "L2") in keys
+
+
+# ---------------------------------------------------------------------------
+# CLI smoke
+# ---------------------------------------------------------------------------
+
+def test_cli_sweep_dry_run(tmp_path):
+    out = tmp_path / "sweep.json"
+    csv = tmp_path / "sweep.csv"
+    r = subprocess.run(
+        [sys.executable, "-m", "repro", "sweep", "--backend", "systolic",
+         "--dry-run", "--out", str(out), "--csv", str(csv)],
+        capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stderr
+    assert "sweep ok:" in r.stdout
+    blob = json.loads(out.read_text())
+    for fr in blob["frontiers"].values():
+        assert fr["anchor"]["area_vs_sram"] == 1.0
+    assert csv.read_text().startswith("geometry,subpartition,candidate")

@@ -8,14 +8,13 @@ import os
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
 
 def test_paper_workflow_end_to_end(tmp_path):
     """§3.1 usage scenario: backend -> frontend -> composition report."""
     from repro.launch.profile import main
     out = str(tmp_path / "report.json")
-    report = main(["--arch", "tinyllama_1_1b", "--backend", "systolic",
+    main(["--arch", "tinyllama_1_1b", "--backend", "systolic",
                    "--dataflow", "ws", "--pe", "64", "--seq", "64",
                    "--out", out])
     assert os.path.exists(out)
