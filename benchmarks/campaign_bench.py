@@ -1,0 +1,50 @@
+"""Campaign orchestrator overhead benchmark.
+
+Times a small two-backend campaign over ``polybench-2mm`` twice against
+a fresh trace cache: the ``cold`` row is backend work + orchestration,
+the ``warm`` row is pure orchestrator + cache + aggregation overhead
+(zero backend runs — the incremental-rerun path the CI regression gate
+tracks), and ``speedup`` is their ratio (higher is better).
+"""
+
+from __future__ import annotations
+
+import shutil
+import tempfile
+import time
+
+
+def campaign_bench():
+    from repro.launch.campaign import CampaignRunner
+
+    rows = []
+    print("\n=== campaign orchestrator: cold vs warm trace cache ===")
+    cache_dir = tempfile.mkdtemp(prefix="bench-campaign-")
+    try:
+        def run():
+            t0 = time.monotonic()
+            result = CampaignRunner(
+                "polybench-2mm", ("systolic", "gpu"), jobs=2,
+                cache_dir=cache_dir,
+                params={"polybench-2mm": {"ni": 48, "nj": 40, "nk": 32,
+                                          "nl": 56}},
+                backend_cfg={"systolic": {"rows": 32, "cols": 32}},
+            ).run()
+            return result, (time.monotonic() - t0) * 1e6
+
+        cold_res, cold_us = run()
+        warm_res, warm_us = run()
+        assert cold_res.executed == 2 and warm_res.executed == 0
+        speedup = cold_us / max(warm_us, 1.0)
+        print(f"cold {cold_us / 1e3:8.1f} ms  ({cold_res.executed} "
+              f"backend run(s))")
+        print(f"warm {warm_us / 1e3:8.1f} ms  ({warm_res.cache_hits} "
+              f"cache hit(s))  {speedup:.1f}x")
+        rows.append(f"campaign.cold,{cold_us:.1f},"
+                    f"executed={cold_res.executed}")
+        rows.append(f"campaign.warm,{warm_us:.1f},"
+                    f"cache_hits={warm_res.cache_hits}")
+        rows.append(f"campaign.speedup,{speedup:.2f},cold/warm")
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+    return rows

@@ -11,6 +11,13 @@ Subcommands:
              (x cache geometries) and emit Pareto frontiers with the
              all-SRAM anchor (see ``repro.launch.sweep`` for flags;
              ``--out``/``--csv`` for JSON/CSV output)
+  campaign   run N registered workloads x M backends through the full
+             pipeline with a worker pool and an on-disk trace cache, and
+             emit the cross-suite aggregate report (access-weighted
+             short-lived fractions per backend per retention bin +
+             suite-level Pareto frontiers; ``--dry-run`` prints the job
+             plan without touching a backend)
+  workloads  list the registered workload specs (name, suite, backends)
   backends   list the registered profiling backends
 
 Examples::
@@ -21,6 +28,10 @@ Examples::
   PYTHONPATH=src python -m repro sweep --backend systolic --dry-run
   PYTHONPATH=src python -m repro sweep --backend systolic \
       --retention-scales 0.5,1,2,4 --csv sweep.csv
+  PYTHONPATH=src python -m repro campaign --workloads \
+      tinyllama_1_1b,polybench-2mm --backends systolic,gpu --jobs 2
+  PYTHONPATH=src python -m repro campaign --dry-run
+  PYTHONPATH=src python -m repro workloads
   PYTHONPATH=src python -m repro backends
 """
 
@@ -44,6 +55,16 @@ def main(argv=None) -> int:
     if cmd == "sweep":
         from repro.launch.sweep import main as sweep_main
         sweep_main(rest)
+        return 0
+    if cmd == "campaign":
+        from repro.launch.campaign import main as campaign_main
+        campaign_main(rest)
+        return 0
+    if cmd == "workloads":
+        from repro.workloads import available_workloads, get_workload
+        for name in available_workloads():
+            spec = get_workload(name)
+            print(f"{spec.describe()}  {spec.description}")
         return 0
     if cmd == "backends":
         from repro.core import available_backends, get_backend

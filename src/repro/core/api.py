@@ -317,9 +317,38 @@ class ProfileSession:
             dump_report(self._report, path)
         return self._report
 
-    def run(self, workload, **cfg) -> dict:
-        """profile -> analyze -> compose -> report in one call."""
-        return self.profile(workload, **cfg).analyze().compose().report()
+    def run(self, workload, *, mode: str | None = None,
+            write_allocate: bool | None = None,
+            devices: Sequence[DeviceModel | str] | None = None,
+            report_path: str | None = None, **cfg) -> dict:
+        """profile -> analyze -> compose -> report in one call.
+
+        Analysis options are routed by stage instead of all landing on
+        the backend: ``mode``/``devices`` go to ``analyze()``/
+        ``compose()``, everything else to ``profile()``.  An explicit
+        ``write_allocate`` goes to *both* — it is simultaneously a
+        cache-simulator policy and the frontend's write-miss semantics,
+        and the two must agree (paper Table 8 pairs them).
+        """
+        if write_allocate is not None:
+            cfg["write_allocate"] = write_allocate
+        self.profile(workload, **cfg)
+        self.analyze(mode=mode,
+                     write_allocate=(True if write_allocate is None
+                                     else write_allocate),
+                     devices=devices)
+        self.compose(devices=devices)
+        return self.report(report_path)
+
+    @classmethod
+    def campaign(cls, workloads, backends, **kw):
+        """Run a multi-workload x multi-backend campaign and return the
+        :class:`repro.launch.campaign.CampaignResult` (cached, pooled;
+        see ``python -m repro campaign``).  ``kw`` goes to
+        :class:`repro.launch.campaign.CampaignRunner` (``jobs=``,
+        ``cache_dir=``, ``seq=``, ``retention_bins=``, ...)."""
+        from repro.launch.campaign import CampaignRunner
+        return CampaignRunner(workloads, backends, **kw).run()
 
     # ------------------------------------------------------------------
     # accessors

@@ -1,0 +1,510 @@
+"""Multi-workload campaign orchestrator: ``python -m repro campaign``.
+
+The paper's headline numbers are *suite-level* aggregates ("64.3% of
+first-level GPU cache accesses ... exhibit sub-microsecond lifetimes"
+across MLPerf Inference + PolyBench), not single-run observations.
+:class:`CampaignRunner` produces them: it runs N registered workloads x
+M registry backends through the full ``ProfileSession`` pipeline with a
+worker pool, caches each run's analysis artifact on disk keyed by a
+content hash of (workload spec, backend, config), and folds the
+per-run results into one cross-suite aggregate report —
+access-weighted short-lived fractions per backend per retention bin,
+plus per-suite optimal-composition Pareto frontiers computed by reusing
+the ``repro.sweep`` engine across the whole campaign.
+
+Because every job is cached by content hash, re-runs are incremental
+and interrupted campaigns resume: only jobs whose artifact is missing
+(or whose key changed) hit a backend again.
+
+  PYTHONPATH=src python -m repro campaign \
+      --workloads tinyllama_1_1b,polybench-2mm --backends systolic,gpu \
+      --jobs 2
+  PYTHONPATH=src python -m repro campaign --workloads suite:polybench \
+      --backends gpu --cache-dir /tmp/gainsight-cache --out campaign.json
+  PYTHONPATH=src python -m repro campaign --dry-run      # plan only, CI
+
+Import contract: planning (``--dry-run``, cache-key computation) uses
+only ``repro.workloads`` + stdlib; backends/JAX load only when jobs
+actually execute.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import hashlib
+import json
+import math
+import os
+import tempfile
+from typing import Mapping, Sequence
+
+from repro.workloads import (canonical_backend, get_workload,
+                             resolve_workloads)
+
+SCHEMA_VERSION = 1
+
+# Default retention bins: Si-GCRAM (1 us) and Hybrid-GCRAM (10 us) —
+# repro.core.devices values, kept literal so planning stays jax-free.
+DEFAULT_RETENTION_BINS = (1.0e-6, 1.0e-5)
+
+# Default sweep axes: the sram-only anchor plus the DEFAULT_DEVICES
+# point plus a retention-scaled variant per side — small enough to ride
+# along every campaign job, wide enough for a non-degenerate frontier.
+DEFAULT_SWEEP_AXES = {"mixes": (0.0, 1.0),
+                      "retention_scales": (0.5, 1.0, 2.0),
+                      "per_mix": False}
+
+
+def _bin_label(retention_s: float) -> str:
+    return format(retention_s, "g")
+
+
+@dataclasses.dataclass(frozen=True)
+class CampaignJob:
+    """One planned (workload, backend) cell with its cache identity."""
+    workload: str
+    backend: str            # canonical registry name
+    key: str                # trace-cache content hash
+    params: tuple           # effective spec params (sorted pairs)
+    cfg: tuple              # campaign-level backend cfg overrides
+
+    @property
+    def label(self) -> str:
+        return f"{self.workload}@{self.backend}"
+
+
+@dataclasses.dataclass(frozen=True)
+class _AggPoint:
+    """Access-weighted mean of one sweep candidate across a campaign —
+    duck-types the SweepPoint interface ``pareto_frontier`` needs."""
+    candidate: str
+    subpartition: str
+    area_vs_sram: float
+    energy_vs_sram: float
+    n_workloads: int
+
+    def asdict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass
+class CampaignResult:
+    """Executed campaign: per-job artifacts + the aggregate report."""
+    jobs: list              # CampaignJob, plan order
+    artifacts: list         # per-job artifact dicts (cache schema)
+    cached: list            # per-job bool: served from the trace cache
+    aggregate: dict         # the cross-suite aggregate report
+
+    @property
+    def executed(self) -> int:
+        return sum(1 for c in self.cached if not c)
+
+    @property
+    def cache_hits(self) -> int:
+        return sum(1 for c in self.cached if c)
+
+    def to_json(self) -> dict:
+        return self.aggregate
+
+    def csv_rows(self) -> list:
+        """``backend,subpartition,retention_s,short_lived_fraction,
+        accesses`` rows (header included)."""
+        rows = ["backend,subpartition,retention_s,short_lived_fraction,"
+                "accesses"]
+        for backend, subs in self.aggregate["aggregate"].items():
+            for sub, entry in subs.items():
+                for label, frac in entry["short_lived"].items():
+                    rows.append(f"{backend},{sub},{label},{frac:.9g},"
+                                f"{entry['accesses']}")
+        return rows
+
+
+class CampaignRunner:
+    """Run workloads x backends with caching and aggregate reporting.
+
+    Parameters
+    ----------
+    workloads : selector accepted by ``resolve_workloads`` (names,
+        ``"all"``, ``"suite:<name>"``).
+    backends : backend names/aliases; (workload, backend) cells the
+        spec has no lowering for are skipped (recorded in the report).
+    jobs : worker threads for the job pool.
+    cache_dir : on-disk trace cache; ``None`` disables caching.
+    seq : convenience override applied to every spec with a ``seq``
+        param.
+    params : per-workload param overrides, ``{workload: {k: v}}``.
+    backend_cfg : per-backend run kwargs, ``{backend: {k: v}}``
+        (merged over the spec's builder defaults; part of the cache
+        key).
+    retention_bins : retention targets (seconds) for the aggregate
+        short-lived fractions.
+    sweep_axes : DeviceGrid axes for the per-job composition sweep
+        (``mixes`` / ``retention_scales`` / ``area_scales`` /
+        ``energy_scales`` / ``per_mix``), or ``None`` to skip sweeps.
+    devices : device set for analyze/compose (names or DeviceModels);
+        names only are recorded in the cache key.
+    """
+
+    def __init__(self, workloads, backends: Sequence[str], *,
+                 jobs: int = 1, cache_dir: str | None = None,
+                 seq: int | None = None,
+                 params: Mapping[str, Mapping] | None = None,
+                 backend_cfg: Mapping[str, Mapping] | None = None,
+                 retention_bins: Sequence[float] = DEFAULT_RETENTION_BINS,
+                 sweep_axes: Mapping | None = DEFAULT_SWEEP_AXES,
+                 devices: Sequence[str] | None = None):
+        self.workloads = resolve_workloads(workloads)
+        self.backends = tuple(dict.fromkeys(
+            canonical_backend(b.strip()) for b in (
+                backends.split(",") if isinstance(backends, str)
+                else backends)))
+        self.jobs = max(1, int(jobs))
+        self.cache_dir = cache_dir
+        self.seq = seq
+        self.params = {k: dict(v) for k, v in (params or {}).items()}
+        self.backend_cfg = {canonical_backend(k): dict(v)
+                            for k, v in (backend_cfg or {}).items()}
+        self.retention_bins = tuple(float(b) for b in retention_bins)
+        if not self.retention_bins:
+            raise ValueError("retention_bins must be non-empty")
+        self.sweep_axes = dict(sweep_axes) if sweep_axes else None
+        self.devices = tuple(devices) if devices is not None else None
+        self.skipped: list = []      # (workload, backend) without lowering
+
+    # ------------------------------------------------------------------
+    # planning / cache keys
+    # ------------------------------------------------------------------
+    def _spec_for(self, workload: str):
+        spec = get_workload(workload)
+        overrides = dict(self.params.get(workload, {}))
+        if self.seq is not None and "seq" in spec.param_dict:
+            overrides.setdefault("seq", self.seq)
+        return spec.with_params(**overrides) if overrides else spec
+
+    def _key(self, spec, backend: str) -> str:
+        payload = {
+            "schema": SCHEMA_VERSION,
+            "workload": spec.content_hash(),
+            "backend": backend,
+            "cfg": self.backend_cfg.get(backend, {}),
+            "devices": list(self.devices) if self.devices else None,
+            "retention_bins": list(self.retention_bins),
+            "sweep": self.sweep_axes,
+        }
+        return hashlib.sha256(
+            json.dumps(payload, sort_keys=True,
+                       default=repr).encode()).hexdigest()
+
+    def plan(self) -> list:
+        """The job list (no backend work): one ``CampaignJob`` per
+        supported (workload, backend) cell, in deterministic order."""
+        out = []
+        self.skipped = []
+        for name in self.workloads:
+            spec = self._spec_for(name)
+            for backend in self.backends:
+                if not spec.supports(backend):
+                    self.skipped.append((name, backend))
+                    continue
+                out.append(CampaignJob(
+                    workload=name, backend=backend,
+                    key=self._key(spec, backend), params=spec.params,
+                    cfg=tuple(sorted(
+                        self.backend_cfg.get(backend, {}).items()))))
+        return out
+
+    def _cache_path(self, job: CampaignJob) -> str | None:
+        if not self.cache_dir:
+            return None
+        return os.path.join(self.cache_dir, f"{job.key}.json")
+
+    def is_cached(self, job: CampaignJob) -> bool:
+        path = self._cache_path(job)
+        return bool(path) and os.path.exists(path)
+
+    # ------------------------------------------------------------------
+    # execution
+    # ------------------------------------------------------------------
+    def _execute(self, job: CampaignJob) -> dict:
+        """Run one (workload, backend) cell through the full pipeline
+        and shape the cacheable artifact."""
+        from repro.core import ProfileSession
+        spec = self._spec_for(job.workload)
+        workload, cfg = spec.build(job.backend)
+        cfg = {**cfg, **dict(job.cfg)}
+        session = ProfileSession(job.backend, devices=self.devices)
+        session.profile(workload, **cfg).analyze().compose()
+        report = session.report()
+
+        short_lived: dict = {}
+        accesses: dict = {}
+        for sub, entry in report["subpartitions"].items():
+            accesses[sub] = int(entry["n_reads"]) + int(entry["n_writes"])
+            short_lived[sub] = {
+                _bin_label(b): float(session.short_lived_fraction(sub, b))
+                for b in self.retention_bins}
+
+        sweep_points: list = []
+        if self.sweep_axes:
+            from repro.sweep import DeviceGrid
+            grid = DeviceGrid(**self.sweep_axes)
+            result = session.sweep(grid, attach=False)
+            sweep_points = [
+                {"candidate": p.candidate,
+                 "subpartition": p.subpartition,
+                 "area_vs_sram": float(p.area_vs_sram),
+                 "energy_vs_sram": float(p.energy_vs_sram)}
+                for p in result.points]
+
+        return {"schema": SCHEMA_VERSION, "key": job.key,
+                "workload": job.workload, "backend": job.backend,
+                "params": dict(job.params), "cfg": dict(job.cfg),
+                "report": report, "accesses": accesses,
+                "short_lived": short_lived,
+                "sweep_points": sweep_points}
+
+    def _run_job(self, job: CampaignJob) -> tuple:
+        """(artifact, cached) for one job, via the trace cache."""
+        path = self._cache_path(job)
+        if path and os.path.exists(path):
+            with open(path) as f:
+                return json.load(f), True
+        artifact = self._execute(job)
+        if path:
+            os.makedirs(self.cache_dir, exist_ok=True)
+            fd, tmp = tempfile.mkstemp(dir=self.cache_dir,
+                                       suffix=".tmp")
+            try:
+                with os.fdopen(fd, "w") as f:
+                    json.dump(artifact, f, default=repr)
+                os.replace(tmp, path)   # atomic: readers never see partials
+            except BaseException:
+                if os.path.exists(tmp):
+                    os.unlink(tmp)
+                raise
+        return artifact, False
+
+    def run(self) -> CampaignResult:
+        jobs = self.plan()
+        if self.jobs == 1 or len(jobs) <= 1:
+            results = [self._run_job(j) for j in jobs]
+        else:
+            from concurrent.futures import ThreadPoolExecutor
+            with ThreadPoolExecutor(max_workers=self.jobs) as pool:
+                results = list(pool.map(self._run_job, jobs))
+        artifacts = [a for a, _ in results]
+        cached = [c for _, c in results]
+        aggregate = self._aggregate(jobs, artifacts, cached)
+        return CampaignResult(jobs=jobs, artifacts=artifacts,
+                              cached=cached, aggregate=aggregate)
+
+    # ------------------------------------------------------------------
+    # the cross-suite aggregate frontend
+    # ------------------------------------------------------------------
+    def _aggregate(self, jobs, artifacts, cached) -> dict:
+        bins = [_bin_label(b) for b in self.retention_bins]
+        # backend -> sub -> accumulators
+        acc: dict = {}
+        for art in artifacts:
+            slot = acc.setdefault(art["backend"], {})
+            for sub, n in art["accesses"].items():
+                e = slot.setdefault(sub, {
+                    "accesses": 0,
+                    "weighted": {b: 0.0 for b in bins},
+                    "per_workload": {}})
+                e["accesses"] += n
+                fracs = art["short_lived"][sub]
+                for b in bins:
+                    e["weighted"][b] += fracs.get(b, 0.0) * n
+                e["per_workload"][art["workload"]] = {
+                    "accesses": n,
+                    "short_lived": {b: fracs.get(b) for b in bins}}
+
+        agg: dict = {}
+        for backend, subs in acc.items():
+            agg[backend] = {}
+            for sub, e in subs.items():
+                total = e["accesses"]
+                agg[backend][sub] = {
+                    "accesses": total,
+                    "short_lived": {
+                        b: (e["weighted"][b] / total if total else 0.0)
+                        for b in bins},
+                    "per_workload": e["per_workload"]}
+
+        return {
+            "schema": SCHEMA_VERSION,
+            "campaign": {
+                "workloads": list(self.workloads),
+                "backends": list(self.backends),
+                "retention_bins_s": list(self.retention_bins),
+                "n_jobs": len(jobs),
+                "executed": sum(1 for c in cached if not c),
+                "cache_hits": sum(1 for c in cached if c),
+                "cache_dir": self.cache_dir,
+                "skipped": [list(s) for s in self.skipped],
+            },
+            "jobs": [{"workload": j.workload, "backend": j.backend,
+                      "key": j.key, "cached": c,
+                      "accesses": sum(a["accesses"].values())}
+                     for j, a, c in zip(jobs, artifacts, cached)],
+            "aggregate": agg,
+            "suite_frontiers": self._suite_frontiers(artifacts),
+        }
+
+    def _suite_frontiers(self, artifacts) -> dict:
+        """Per-(backend, subpartition) Pareto frontiers of the
+        access-weighted mean sweep points across the whole campaign —
+        the PR-3 engine's reduction reused at suite level."""
+        if not self.sweep_axes:
+            return {}
+        # (backend, sub, candidate) -> [w_area, w_energy, weight, n]
+        cells: dict = {}
+        for art in artifacts:
+            for p in art.get("sweep_points", ()):
+                w = art["accesses"].get(p["subpartition"], 0)
+                area, energy = p["area_vs_sram"], p["energy_vs_sram"]
+                if w <= 0 or not math.isfinite(area) \
+                        or not math.isfinite(energy):
+                    continue
+                k = (art["backend"], p["subpartition"], p["candidate"])
+                c = cells.setdefault(k, [0.0, 0.0, 0.0, 0])
+                c[0] += area * w
+                c[1] += energy * w
+                c[2] += w
+                c[3] += 1
+        groups: dict = {}
+        for (backend, sub, cand), (wa, we, w, n) in cells.items():
+            groups.setdefault((backend, sub), []).append(_AggPoint(
+                candidate=cand, subpartition=sub,
+                area_vs_sram=wa / w, energy_vs_sram=we / w,
+                n_workloads=n))
+        if not groups:
+            return {}
+        from repro.sweep.pareto import pareto_frontier
+        return {f"{backend}/{sub}": pareto_frontier(pts).asdict()
+                for (backend, sub), pts in sorted(groups.items())}
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def _floats(csv: str) -> tuple:
+    return tuple(float(v) for v in csv.split(",") if v.strip())
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(
+        prog="repro campaign",
+        description="multi-workload x multi-backend profiling campaign "
+                    "with an on-disk trace cache and a cross-suite "
+                    "aggregate report")
+    ap.add_argument("--workloads", default="tinyllama_1_1b,polybench-2mm",
+                    help="comma-separated workload names, 'all', or "
+                         "'suite:<name>' (see `python -m repro "
+                         "workloads`)")
+    ap.add_argument("--backends", default="systolic,gpu",
+                    help="comma-separated backend names/aliases")
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="worker threads for the job pool")
+    ap.add_argument("--cache-dir", default=".gainsight-cache",
+                    help="on-disk trace cache (content-hash keyed); "
+                         "'' disables caching")
+    ap.add_argument("--seq", type=int, default=None,
+                    help="override the seq param of every workload "
+                         "that has one")
+    ap.add_argument("--pe", type=int, default=128,
+                    help="systolic array rows=cols")
+    ap.add_argument("--dataflow", default="ws", choices=["is", "ws", "os"])
+    ap.add_argument("--retention-bins", default="1e-6,1e-5",
+                    help="retention targets (s) for the aggregate "
+                         "short-lived fractions")
+    ap.add_argument("--mixes", default="0,1",
+                    help="sweep axis: Si<->Hybrid interpolation points")
+    ap.add_argument("--retention-scales", default="0.5,1,2",
+                    help="sweep axis: retention scale factors")
+    ap.add_argument("--no-sweep", action="store_true",
+                    help="skip the per-job composition sweep (no suite "
+                         "frontiers)")
+    ap.add_argument("--out", default=None,
+                    help="aggregate JSON path (default: "
+                         "<cache-dir>/campaign_report.json)")
+    ap.add_argument("--csv", default=None, help="aggregate CSV path")
+    ap.add_argument("--dry-run", action="store_true",
+                    help="print the job plan (cache keys + hit/miss) "
+                         "and exit without running any backend")
+    args = ap.parse_args(argv)
+
+    sweep_axes = None if args.no_sweep else {
+        "mixes": _floats(args.mixes),
+        "retention_scales": _floats(args.retention_scales),
+        "per_mix": False,
+    }
+    runner = CampaignRunner(
+        args.workloads, args.backends, jobs=args.jobs,
+        cache_dir=args.cache_dir or None, seq=args.seq,
+        backend_cfg={"systolic": {"rows": args.pe, "cols": args.pe,
+                                  "dataflow": args.dataflow}},
+        retention_bins=_floats(args.retention_bins),
+        sweep_axes=sweep_axes)
+
+    jobs = runner.plan()
+    if args.dry_run:
+        print(f"{'workload':22s} {'backend':10s} {'cache key':14s} "
+              f"{'state'}")
+        for job in jobs:
+            state = "cached" if runner.is_cached(job) else "pending"
+            print(f"{job.workload:22s} {job.backend:10s} "
+                  f"{job.key[:12]}.. {state}")
+        for wl, backend in runner.skipped:
+            print(f"{wl:22s} {backend:10s} {'-':14s} no lowering "
+                  "(skipped)")
+        print(f"campaign dry-run ok: {len(jobs)} job(s), "
+              f"{sum(runner.is_cached(j) for j in jobs)} cached, "
+              f"{len(runner.skipped)} unsupported")
+        return {"jobs": [job.label for job in jobs],
+                "skipped": [list(s) for s in runner.skipped]}
+
+    result = runner.run()
+    agg = result.aggregate
+
+    print(f"campaign: {len(jobs)} job(s), {result.executed} executed, "
+          f"{result.cache_hits} from cache "
+          f"({args.jobs} worker(s), cache={runner.cache_dir})")
+    bins = [_bin_label(b) for b in runner.retention_bins]
+    head = " ".join(f"{'<=' + b + 's':>12s}" for b in bins)
+    print(f"\n{'backend/subpartition':28s} {'accesses':>10s} {head}")
+    for backend, subs in agg["aggregate"].items():
+        for sub, entry in subs.items():
+            cells = " ".join(
+                f"{100 * entry['short_lived'][b]:11.1f}%" for b in bins)
+            print(f"{backend + '/' + sub:28s} "
+                  f"{entry['accesses']:>10d} {cells}")
+    for key, frontier in agg["suite_frontiers"].items():
+        best = frontier["points"][0] if frontier["points"] else None
+        if best:
+            print(f"suite frontier {key}: {len(frontier['points'])} "
+                  f"point(s); best area "
+                  f"{100 * best['area_vs_sram']:.1f}% / energy "
+                  f"{100 * best['energy_vs_sram']:.1f}% vs SRAM "
+                  f"({best['candidate']})")
+
+    out = args.out
+    if out is None and runner.cache_dir:
+        out = os.path.join(runner.cache_dir, "campaign_report.json")
+    if out:
+        os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+        with open(out, "w") as f:
+            json.dump(agg, f, indent=2, default=repr)
+        print(f"\naggregate json -> {out}")
+    if args.csv:
+        with open(args.csv, "w") as f:
+            f.write("\n".join(result.csv_rows()) + "\n")
+        print(f"aggregate csv -> {args.csv}")
+    return agg
+
+
+if __name__ == "__main__":
+    main()

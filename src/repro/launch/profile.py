@@ -1,21 +1,25 @@
 """GainSight profiling driver: the paper's workflow as a framework feature.
 
 A thin CLI over :class:`repro.core.ProfileSession` - for a given
-architecture, run the selected registry backend, the analytical frontend,
-and the heterogeneous-memory composition, and emit the report
-(JSON + console).
+*registered workload* (``repro.workloads``; ``--arch`` accepts any
+registry name, not just the ten architecture configs), run the selected
+registry backend, the analytical frontend, and the heterogeneous-memory
+composition, and emit the report (JSON + console).
 
   PYTHONPATH=src python -m repro profile --arch tinyllama_1_1b \
       --backend systolic --dataflow ws --pe 128
   PYTHONPATH=src python -m repro profile --arch tinyllama_1_1b \
       --backend gpu --seq 128
+  PYTHONPATH=src python -m repro profile --arch polybench-2mm \
+      --backend systolic
   PYTHONPATH=src python -m repro profile --arch mamba2_130m \
       --backend tpu --seq 64
   PYTHONPATH=src python -m repro profile --backend systolic --dry-run
 
 (``python -m repro.launch.profile ...`` still works; the legacy
 ``profile_systolic``/``profile_gpu``/``profile_tpu`` entry points remain
-as shims over the session API.)
+as shims over the session API, and the workload builders that used to be
+hand-wired here live in ``repro.workloads.suites`` now.)
 """
 
 from __future__ import annotations
@@ -24,50 +28,19 @@ import argparse
 import json
 
 from repro.backends.systolic import GemmLayer
-from repro.configs.base import get_config
 from repro.core import HYBRID_GCRAM, SI_GCRAM, ProfileSession
-
-
-def transformer_gemms(cfg, seq: int, n_layers: int = 2):
-    """The GEMM list of a decoder block stack (systolic workload input)."""
-    hd = cfg.hd
-    kvd = cfg.kv_heads * hd
-    layers = []
-    for i in range(n_layers):
-        layers += [
-            GemmLayer(f"L{i}.qkv", seq, cfg.d_model + 2 * kvd, cfg.d_model),
-            GemmLayer(f"L{i}.scores", seq, seq, hd),
-            GemmLayer(f"L{i}.pv", seq, hd, seq),
-            GemmLayer(f"L{i}.o", seq, cfg.d_model, cfg.d_model),
-            GemmLayer(f"L{i}.up", seq, cfg.d_ff or cfg.d_model * 4,
-                      cfg.d_model),
-            GemmLayer(f"L{i}.down", seq, cfg.d_model,
-                      cfg.d_ff or cfg.d_model * 4),
-        ]
-    return layers
+from repro.workloads import (get_workload, transformer_gemms,  # noqa: F401
+                             transformer_program, tpu_step_workload)
 
 
 def _op_program(cfg, seq):
-    """Op-stream program for the cache-hierarchy ("gpu") backend."""
-    def program(sb):
-        from repro.backends.opstream import transformer_ops
-        transformer_ops(sb, cfg.d_model, max(cfg.n_heads, 1),
-                        max(cfg.kv_heads, 1), cfg.d_ff or 4 * cfg.d_model,
-                        seq, n_layers=2, moe_experts=cfg.moe_experts,
-                        moe_topk=cfg.moe_topk)
-    return program
+    """Back-compat alias for :func:`repro.workloads.transformer_program`."""
+    return transformer_program(cfg, seq)
 
 
 def _tpu_workload(cfg, seq):
-    import jax
-
-    from repro.configs.base import ShapeCell
-    from repro.models.api import batch_specs, build
-    api = build(cfg)
-    bspec = batch_specs(cfg, ShapeCell("p", "train", seq, 1))
-    params_sds = jax.eval_shape(lambda k: api.init(k)[0],
-                                jax.random.PRNGKey(0))
-    return (api.loss, params_sds, bspec)
+    """Back-compat alias for :func:`repro.workloads.tpu_step_workload`."""
+    return tpu_step_workload(cfg, seq)
 
 
 def _summarize(session: ProfileSession, out: str | None) -> dict:
@@ -104,7 +77,7 @@ def profile_systolic(cfg, seq, dataflow, pe, out, chunk_events=None):
 
 def profile_gpu(cfg, seq, out, sample=8, chunk_events=None):
     session = ProfileSession("gpu")
-    session.profile(_op_program(cfg, seq), sample=sample,
+    session.profile(transformer_program(cfg, seq), sample=sample,
                     chunk_events=chunk_events)
     session.analyze().compose()
     return _summarize(session, out)
@@ -112,7 +85,7 @@ def profile_gpu(cfg, seq, out, sample=8, chunk_events=None):
 
 def profile_tpu(cfg, seq, out):
     session = ProfileSession("tpu")
-    session.profile(_tpu_workload(cfg, seq), sample=4)
+    session.profile(tpu_step_workload(cfg, seq), sample=4)
     session.analyze().compose()
     return _summarize(session, out)
 
@@ -149,9 +122,27 @@ def _dry_run(backend: str) -> dict:
     return report
 
 
+def build_workload(arch: str, backend: str, *, seq: int | None = None,
+                   smoke: bool = True):
+    """Registry lowering for the CLI: ``(workload, builder_cfg)`` for any
+    registered workload name, with ``seq``/``tpu_smoke`` applied when the
+    spec has those params."""
+    spec = get_workload(arch)
+    overrides = {}
+    if seq is not None and "seq" in spec.param_dict:
+        overrides["seq"] = seq
+    if "tpu_smoke" in spec.param_dict:
+        overrides["tpu_smoke"] = smoke
+    if overrides:
+        spec = spec.with_params(**overrides)
+    return spec.build(backend)
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", default="tinyllama_1_1b")
+    ap.add_argument("--arch", default="tinyllama_1_1b",
+                    help="registered workload name (see `python -m repro "
+                         "workloads`)")
     ap.add_argument("--smoke", action="store_true", default=True)
     ap.add_argument("--full", dest="smoke", action="store_false")
     ap.add_argument("--backend", default="systolic",
@@ -171,24 +162,17 @@ def main(argv=None):
     if args.dry_run:
         return _dry_run(args.backend)
 
-    cfg = get_config(args.arch, smoke=args.smoke)
+    workload, cfg = build_workload(args.arch, args.backend, seq=args.seq,
+                                   smoke=args.smoke)
     if args.backend == "systolic":
-        # systolic profiling uses the full config's GEMM dims (trace size
-        # is governed by seq, not params)
-        cfg = get_config(args.arch, smoke=False)
-        return profile_systolic(cfg, args.seq, args.dataflow, args.pe,
-                                args.out, chunk_events=args.chunk_events)
-    if args.backend in ("gpu", "cachesim"):
-        cfg = get_config(args.arch, smoke=False)
-        return profile_gpu(cfg, args.seq, args.out,
-                           chunk_events=args.chunk_events)
-    if args.backend == "opstream":
-        cfg = get_config(args.arch, smoke=False)
-        session = ProfileSession("opstream")
-        session.profile(_op_program(cfg, args.seq), sample=8)
-        session.analyze().compose()
-        return _summarize(session, args.out)
-    return profile_tpu(cfg, args.seq, args.out)
+        cfg.update(rows=args.pe, cols=args.pe, dataflow=args.dataflow)
+    if args.backend != "tpu" and args.backend != "tpu_graph" \
+            and args.chunk_events:
+        cfg["chunk_events"] = args.chunk_events
+    session = ProfileSession(args.backend)
+    session.profile(workload, **cfg)
+    session.analyze().compose()
+    return _summarize(session, args.out)
 
 
 if __name__ == "__main__":

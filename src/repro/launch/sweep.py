@@ -51,11 +51,9 @@ def _geometries(args) -> dict | None:
 
 
 def _workload(args):
-    """(workload, backend cfg) for the selected backend, as in
-    ``repro.launch.profile``."""
-    from repro.configs.base import get_config
-    from repro.launch.profile import (_op_program, _tpu_workload,
-                                      transformer_gemms)
+    """(workload, backend cfg) for the selected backend, lowered from
+    the ``repro.workloads`` registry (any registered name via
+    ``--arch``)."""
     if args.dry_run:
         from repro.backends.systolic import GemmLayer
         if args.backend == "systolic":
@@ -69,14 +67,14 @@ def _workload(args):
         raise SystemExit(
             f"--dry-run supports systolic/gpu/cachesim/opstream, "
             f"not {args.backend!r}")
-    cfg = get_config(args.arch, smoke=False)
+    from repro.launch.profile import build_workload
+    from repro.workloads import get_workload
+    workload, cfg = build_workload(args.arch, args.backend, seq=args.seq)
     if args.backend == "systolic":
-        return (transformer_gemms(cfg, args.seq),
-                {"rows": args.pe, "cols": args.pe,
-                 "dataflow": args.dataflow})
-    if args.backend in ("gpu", "cachesim", "opstream"):
-        return _op_program(cfg, args.seq), {}
-    return _tpu_workload(get_config(args.arch, smoke=True), args.seq), {}
+        cfg.update(rows=args.pe, cols=args.pe, dataflow=args.dataflow)
+    elif get_workload(args.arch).suite == "archs":
+        cfg.pop("sample", None)       # sweep replays arch streams in full
+    return workload, cfg
 
 
 def main(argv=None):

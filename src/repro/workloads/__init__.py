@@ -1,0 +1,27 @@
+"""Unified workload registry: one spec, every backend (see docs/API.md).
+
+A :class:`WorkloadSpec` describes a workload once and lowers itself to
+each backend's native input via ``build(backend_name)``; the built-in
+suites (``archs`` / ``mlperf`` / ``polybench`` / ``cnn``) register on
+import.  The campaign orchestrator (``python -m repro campaign``,
+:class:`repro.launch.campaign.CampaignRunner`) iterates this registry.
+
+Importing this package is jax-free by contract: builders import backend
+modules lazily inside ``build()`` (tests/test_workloads.py locks this).
+"""
+
+from repro.workloads.spec import (WorkloadSpec, available_suites,
+                                  available_workloads, canonical_backend,
+                                  get_workload, register_workload,
+                                  resolve_workloads)
+from repro.workloads import suites as _suites  # noqa: F401  (registers)
+from repro.workloads.suites import (transformer_gemms,
+                                    transformer_program,
+                                    tpu_step_workload)
+
+__all__ = [
+    "WorkloadSpec", "available_suites", "available_workloads",
+    "canonical_backend", "get_workload", "register_workload",
+    "resolve_workloads", "transformer_gemms", "transformer_program",
+    "tpu_step_workload",
+]
