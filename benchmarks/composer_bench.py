@@ -1,0 +1,84 @@
+"""Composition-engine throughput and policy comparison.
+
+For each assignment policy (``refresh-free``, ``refresh-aware``,
+``bank-quantized``) the bench evaluates a ~10-candidate ``DeviceGrid``
+over one synthetic subpartition (200k lifetimes, 40k addresses — the
+scale of a real L2 trace) two ways:
+
+  ``batched``   one ``repro.compose.engine.evaluate`` call for the whole
+                grid (the refactor's shared kernel: one broadcast per
+                chunk, shared per-address grouping, memoized baselines)
+  ``loop``      the pre-refactor shape — ``compose()`` per candidate,
+                each call paying its own setup
+
+Both paths are asserted identical before timing.  The bench also
+reports ``refresh_aware_gain`` — the refresh-free / refresh-aware
+energy ratio on the ``DEFAULT_DEVICES`` candidate (>= 1 by
+construction, > 1 whenever mid-retention lifetimes exist, as the
+synthetic lognormal spread guarantees): the regression gate keeps both
+the throughput and the policy's energy win in the trajectory.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.sweep_bench import (CLOCK_HZ, _best_of,
+                                    _synthetic_subpartition)
+
+POLICIES = ("refresh-free", "refresh-aware", "bank-quantized")
+
+
+def composer_bench():
+    from repro.compose import evaluate
+    from repro.core import DEFAULT_DEVICES, compose
+    from repro.sweep import DeviceGrid
+
+    grid = DeviceGrid(mixes=(0.0, 0.5, 1.0),
+                      retention_scales=(0.5, 1.0, 2.0), per_mix=True)
+    cands = [c.devices for c in grid.candidates()]
+    stats, raw = _synthetic_subpartition()
+    print(f"\n=== composition engine ({len(cands)} candidates x "
+          f"{len(POLICIES)} policies, {len(stats.lifetimes_s)} "
+          f"lifetimes, {stats.n_unique_addrs} addrs) ===")
+
+    rows = []
+    for policy in POLICIES:
+        batched = evaluate(cands, stats, raw=raw, clock_hz=CLOCK_HZ,
+                           policy=policy)
+        loop = [compose(stats, raw=raw, devices=ds, clock_hz=CLOCK_HZ,
+                        policy=policy) for ds in cands]
+        for cb, cl in zip(batched, loop):
+            assert cb.energy_j == cl.energy_j
+            assert np.array_equal(cb.capacity_fractions,
+                                  cl.capacity_fractions)
+            assert cb.quantization == cl.quantization
+
+        t_batched = _best_of(lambda: evaluate(
+            cands, stats, raw=raw, clock_hz=CLOCK_HZ, policy=policy))
+        t_loop = _best_of(lambda: [
+            compose(stats, raw=raw, devices=ds, clock_hz=CLOCK_HZ,
+                    policy=policy) for ds in cands])
+        speedup = t_loop / t_batched
+        print(f"{policy:16s} batched {t_batched * 1e3:8.1f} ms  "
+              f"loop {t_loop * 1e3:8.1f} ms  {speedup:.2f}x")
+        rows.append(f"composer.{policy}.batched,{t_batched * 1e6:.1f},"
+                    f"candidates={len(cands)}")
+        rows.append(f"composer.{policy}.loop,{t_loop * 1e6:.1f},"
+                    f"candidates={len(cands)}")
+        rows.append(f"composer.{policy}.speedup,{speedup:.2f},"
+                    "batched-vs-loop")
+
+    # the policy's reason to exist: refresh-aware beats refresh-free
+    # on the paper device set whenever mid-retention lifetimes exist
+    rf = compose(stats, raw=raw, devices=DEFAULT_DEVICES,
+                 clock_hz=CLOCK_HZ)
+    ra = compose(stats, raw=raw, devices=DEFAULT_DEVICES,
+                 clock_hz=CLOCK_HZ, policy="refresh-aware")
+    gain = rf.energy_j / ra.energy_j
+    assert gain >= 1.0
+    print(f"refresh-aware energy gain over refresh-free "
+          f"(DEFAULT_DEVICES): {gain:.3f}x")
+    rows.append(f"composer.refresh_aware_gain,{gain:.4f},"
+                "rf_energy/ra_energy")
+    return rows

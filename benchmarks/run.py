@@ -43,6 +43,7 @@ def bench_registry() -> dict:
     from benchmarks import paper_tables as pt
     from benchmarks.cachesim_bench import cachesim_bench
     from benchmarks.campaign_bench import campaign_bench
+    from benchmarks.composer_bench import composer_bench
     from benchmarks.fig5_retention import fig5_retention
     from benchmarks.kernels_bench import kernels_bench
     from benchmarks.sweep_bench import sweep_bench
@@ -51,6 +52,7 @@ def bench_registry() -> dict:
         "pipeline": pipeline_bench,
         "cachesim": cachesim_bench,
         "campaign": campaign_bench,
+        "composer": composer_bench,
         "sweep": sweep_bench,
         "table4": pt.table4_pka,
         "fig5": fig5_retention,
@@ -68,7 +70,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="table4|table6|table7|table8|table9|fig8|fig10|"
-                         "kernels|pipeline|cachesim|campaign|sweep")
+                         "kernels|pipeline|cachesim|campaign|composer|"
+                         "sweep")
     args = ap.parse_args()
 
     rows = []

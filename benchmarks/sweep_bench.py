@@ -1,18 +1,20 @@
 """Sweep-engine throughput: batched candidate evaluation vs naive loop.
 
 Evaluates a ~25-candidate ``DeviceGrid`` over one synthetic subpartition
-(200k lifetimes, 40k addresses — the scale of a real L2 trace) with both
-evaluation paths of ``repro.sweep.SweepRunner``:
+(200k lifetimes, 40k addresses — the scale of a real L2 trace) two ways:
 
-  ``batched``   one NumPy broadcast for the lifetime-fit assignment
-                across all candidates, shared per-address max-lifetime
-                grouping, memoized monolithic baselines
-  ``naive``     ``compose()`` in a Python loop per candidate
+  ``batched``   ``SweepRunner`` feeding the whole grid into one
+                ``repro.compose`` engine call (one broadcast across all
+                candidates, shared per-address grouping, memoized
+                monolithic baselines)
+  ``naive``     ``compose()`` in a Python loop per candidate (each call
+                pays its own grouping/baseline/broadcast setup)
 
 Both produce bit-for-bit identical compositions (asserted here and in
 ``tests/test_sweep.py``); the CSV keeps the speedup in the bench
 trajectory so regressions show up.  Timing is best-of-N after a warm-up
-call.
+call.  ``benchmarks/composer_bench.py`` runs the same comparison across
+all three assignment policies.
 """
 
 from __future__ import annotations
@@ -71,31 +73,35 @@ def _best_of(fn, repeats: int = REPEATS) -> float:
 
 
 def sweep_bench():
+    from repro.core import compose
     from repro.sweep import DeviceGrid, SweepRunner
 
     grid = DeviceGrid(mixes=(0.0, 0.5, 1.0),
                       retention_scales=(0.25, 0.5, 1.0, 2.0),
                       energy_scales=(0.9, 1.0), per_mix=True)
+    cands = grid.candidates()
     stats, raw = _synthetic_subpartition()
     print(f"\n=== sweep engine ({len(grid)} candidates, "
           f"{N_LIFETIMES} lifetimes, {stats.n_unique_addrs} addrs) ===")
 
-    runners = {
-        "batched": SweepRunner(grid, vectorized=True),
-        "naive": SweepRunner(grid, vectorized=False),
+    runner = SweepRunner(grid)
+    paths = {
+        "batched": lambda: [
+            p.composition
+            for p in runner.run_stats(stats, raw, clock_hz=CLOCK_HZ)],
+        "naive": lambda: [
+            compose(stats, raw=raw, devices=c.devices, clock_hz=CLOCK_HZ)
+            for c in cands],
     }
-    points = {
-        name: r.run_stats(stats, raw, clock_hz=CLOCK_HZ)
-        for name, r in runners.items()}
+    points = {name: fn() for name, fn in paths.items()}
     for pb, pn in zip(points["batched"], points["naive"]):
-        assert pb.composition.energy_j == pn.composition.energy_j
-        assert np.array_equal(pb.composition.capacity_fractions,
-                              pn.composition.capacity_fractions)
+        assert pb.energy_j == pn.energy_j
+        assert np.array_equal(pb.capacity_fractions,
+                              pn.capacity_fractions)
 
     rows, secs = [], {}
-    for name, runner in runners.items():
-        secs[name] = _best_of(
-            lambda: runner.run_stats(stats, raw, clock_hz=CLOCK_HZ))
+    for name, fn in paths.items():
+        secs[name] = _best_of(fn)
         us = secs[name] * 1e6
         per_cand = us / len(grid)
         print(f"{name:8s} {secs[name] * 1e3:8.1f} ms  "

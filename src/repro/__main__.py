@@ -4,12 +4,15 @@ Subcommands:
 
   profile    run a workload on a registry backend, analyze lifetimes, and
              emit the heterogeneous-memory report (see
-             ``repro.launch.profile`` for flags; ``--dry-run`` runs a tiny
-             built-in workload as a pipeline smoke test)
+             ``repro.launch.profile`` for flags; ``--policy`` selects the
+             assignment policy, ``--csv`` a machine-readable composition
+             report, ``--dry-run`` runs a tiny built-in workload as a
+             pipeline smoke test)
   sweep      composition design-space sweep: evaluate a DeviceGrid of
              candidate gain-cell device sets over every subpartition
              (x cache geometries) and emit Pareto frontiers with the
              all-SRAM anchor (see ``repro.launch.sweep`` for flags;
+             ``--policy`` selects the assignment policy,
              ``--out``/``--csv`` for JSON/CSV output)
   campaign   run N registered workloads x M backends through the full
              pipeline with a worker pool and an on-disk trace cache, and

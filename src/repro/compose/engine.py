@@ -1,0 +1,309 @@
+"""The policy-driven composition engine: datum→device assignment,
+natively batched over candidate device sets.
+
+One kernel owns the assignment end-to-end: :func:`evaluate` takes *N*
+candidate device sets (a single set, or a whole ``DeviceGrid``'s worth)
+and evaluates the selected :class:`~repro.compose.policies.
+AssignmentPolicy` for all of them through one NumPy broadcast per
+chunk — ``repro.core.composer.compose()`` is a thin single-candidate
+wrapper and ``repro.sweep.SweepRunner`` feeds its whole grid through
+the same call, so there is exactly one implementation of the
+assignment math in the tree.
+
+Batching contract (shared with the policy kernels): candidates are
+processed in chunks sized so the ``[chunk, devices, lifetimes]``
+broadcast stays under ``_MAX_BROADCAST_BYTES`` at the policy's
+``broadcast_itemsize`` — the per-element peak footprint *including*
+concurrent temporaries (bool fit matrix + a temporary for
+refresh-free, ~4 float64 arrays for refresh-aware); the per-address
+grouping is computed once per subpartition and monolithic baselines
+are memoized by device, so only the float reductions that define the
+exact summation order remain per-candidate.
+
+Accounting granularity (both inherited from the seed ``compose()``):
+*energy* is billed per lifetime on the device the policy picks for
+that lifetime; *capacity* is assigned per address (an address lives on
+one device — refresh-free hosts its longest-lived value refresh-free,
+refresh-aware minimizes the address's summed total energy).  With
+``raw=None`` (no per-lifetime addresses available) capacity falls back
+to bits-weighted per-lifetime fractions.
+
+Guarantee: ``policy="refresh-free"`` is bit-for-bit identical to the
+pre-refactor scalar ``compose()`` — device ordering, comparison
+results, and float accumulation order are preserved exactly
+(``tests/test_compose_policies.py`` locks it against a frozen copy of
+the seed implementation).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Mapping, Sequence
+
+import numpy as np
+
+from repro.compose.policies import (AddressGroups, AssignmentPolicy,
+                                    PolicyBatch, get_policy)
+from repro.compose.types import Composition
+from repro.core.devices import DEFAULT_DEVICES, DeviceModel
+from repro.core.frontend import SubpartitionStats, analyze_energy
+
+# Cap on one candidate-chunk broadcast: chunk x devices x lifetimes
+# elements at the policy's item size.  256 MB keeps the matrices
+# cache-friendly without limiting total grid size.
+_MAX_BROADCAST_BYTES = 256 * 1024 * 1024
+
+
+def _access_energy_fj(device: DeviceModel) -> float:
+    """Refresh-free per-bit access energy: the device-ordering key."""
+    return device.read_fj_per_bit + device.write_fj_per_bit
+
+
+def _device_sort_key(device: DeviceModel) -> tuple:
+    """Deterministic device order: cheapest refresh-free access energy
+    first, ties broken by name (equal-energy candidates are common on
+    interpolated grids; input order must never matter)."""
+    return (_access_energy_fj(device), device.name)
+
+
+def address_groups(raw, clock_hz: float) -> AddressGroups:
+    """Group the valid lifetimes of ``raw`` by address (stable order),
+    carrying each address's max lifetime — computed once per
+    subpartition and shared across every candidate and policy."""
+    valid = np.asarray(raw.valid)
+    addr = np.asarray(raw.addr)[valid]
+    lt_cyc = np.asarray(raw.lifetime_cycles)[valid]
+    order = np.argsort(addr, kind="stable")
+    addr_s, lt_sorted = addr[order], lt_cyc[order]
+    new = np.concatenate([[True], addr_s[1:] != addr_s[:-1]])
+    grp = np.cumsum(new) - 1
+    max_lt = np.zeros(grp[-1] + 1 if len(grp) else 0)
+    np.maximum.at(max_lt, grp, lt_sorted)
+    return AddressGroups(order=order, starts=np.flatnonzero(new),
+                         max_lt_s=max_lt / clock_hz)
+
+
+def _per_address_max_lifetime_s(raw, clock_hz: float) -> np.ndarray:
+    """Per-address maximum lifetime in seconds (legacy helper; the
+    grouping now lives in :func:`address_groups`)."""
+    return address_groups(raw, clock_hz).max_lt_s
+
+
+def _area_accounting(
+    devs: Sequence[DeviceModel],
+    frac: np.ndarray,
+    capacity_bits: float,
+) -> tuple:
+    """(area_um2, area_vs_sram) of a capacity-weighted hetero array.
+
+    The baseline is the in-set SRAM device, so an all-SRAM composition
+    is exactly 1.0 whatever the SRAM cell model in use.  Quantized
+    fractions may sum past 1 — the slack is real silicon and is billed.
+    """
+    areas = np.array([d.area_um2_per_bit for d in devs])
+    per_bit = float((frac * areas).sum())
+    sram_per_bit = next(d.area_um2_per_bit for d in devs if d.name == "SRAM")
+    return per_bit * capacity_bits, per_bit / sram_per_bit
+
+
+def _energy_per_lifetime_j(
+    device: DeviceModel, reads: np.ndarray, bits: np.ndarray) -> np.ndarray:
+    """Refresh-free active energy of each lifetime on ``device`` (J).
+
+    Each lifetime = 1 write (its initiation) + n reads, at block
+    granularity.
+    """
+    e_fj = (device.write_fj_per_bit * bits
+            + device.read_fj_per_bit * reads * bits)
+    return e_fj * 1e-15
+
+
+def _validate_sets(sets: Sequence[tuple]) -> None:
+    for ds in sets:
+        if not ds:
+            raise ValueError("compose() needs a non-empty device set")
+        if not any(d.name == "SRAM" for d in ds):
+            raise ValueError(
+                "compose() needs SRAM in the device set as the "
+                "infinite-retention baseline; got "
+                f"{sorted(d.name for d in ds)}")
+
+
+def _empty_composition(stats: SubpartitionStats, devs: list,
+                       device_set: tuple,
+                       pol: AssignmentPolicy) -> Composition:
+    """No valid lifetimes (empty trace, or every segment dead under
+    no-write-allocate).  The monolithic baselines still exist: the
+    accesses themselves cost energy even if no datum ever lived."""
+    frac = np.zeros(len(devs))
+    frac[-1] = 1.0
+    frac, quant = pol.capacity(frac, devs)
+    mono = {d.name: analyze_energy(stats, d)[0] for d in device_set}
+    sram_e = mono["SRAM"]
+    area_um2, area_ratio = _area_accounting(devs, frac, stats.capacity_bits)
+    return Composition(
+        devices=tuple(d.name for d in devs),
+        capacity_fractions=frac,
+        energy_j=0.0,
+        energy_vs_sram=0.0 / sram_e if sram_e > 0 else math.nan,
+        monolithic_energy_j=mono,
+        area_um2=area_um2,
+        area_vs_sram=area_ratio,
+        policy=pol.name,
+        quantization=quant,
+    )
+
+
+def evaluate(
+    device_sets: Sequence[Sequence[DeviceModel]],
+    stats: SubpartitionStats,
+    raw=None,
+    *,
+    clock_hz: float = 1.0e9,
+    policy: AssignmentPolicy | str = "refresh-free",
+) -> list:
+    """One :class:`Composition` per candidate device set, all evaluated
+    through the same batched policy kernel.
+
+    ``evaluate([devices])[0]`` is ``compose()``; ``evaluate(grid)`` is
+    the sweep's inner loop.  Candidates are processed in chunks
+    end-to-end (policy broadcast and reductions alike), so peak memory
+    is bounded however large the grid.
+    """
+    pol = get_policy(policy)
+    sets = [tuple(ds) for ds in device_sets]
+    if not sets:
+        return []
+    _validate_sets(sets)
+
+    # Deterministic device order: cheapest refresh-free access energy
+    # first, name-tie-broken; SRAM (infinite retention) is the usual
+    # last resort.
+    sorted_devs = [sorted(ds, key=_device_sort_key) for ds in sets]
+
+    lt = stats.lifetimes_s
+    if len(lt) == 0:
+        return [_empty_composition(stats, devs, ds, pol)
+                for devs, ds in zip(sorted_devs, sets)]
+
+    bits = stats.lifetime_bits
+    reads = stats.accesses_per_lifetime - 1.0
+    groups = address_groups(raw, clock_hz) if raw is not None else None
+    if groups is None:
+        # capacity fallback: bits-weighted per-lifetime fractions
+        w = bits / bits.sum()
+
+    # Monolithic baselines depend on (stats, device); memoized by device
+    # — SRAM is shared by every candidate, scale variants recur.
+    mono_cache: dict = {}
+
+    def mono_energy(d: DeviceModel) -> float:
+        if d not in mono_cache:
+            mono_cache[d] = analyze_energy(stats, d)[0]
+        return mono_cache[d]
+
+    n_dev = np.array([len(ds) for ds in sorted_devs])
+    d_max = int(n_dev.max())
+
+    # Padded device matrices ([candidate, device], small): -inf
+    # retention never fits, +inf energies never win an argmin.
+    ret = np.full((len(sets), d_max), -np.inf)
+    read_fj = np.full((len(sets), d_max), np.inf)
+    write_fj = np.full((len(sets), d_max), np.inf)
+    for ci, devs in enumerate(sorted_devs):
+        ret[ci, :len(devs)] = [d.retention_at(stats.write_freq_hz)
+                               for d in devs]
+        read_fj[ci, :len(devs)] = [d.read_fj_per_bit for d in devs]
+        write_fj[ci, :len(devs)] = [d.write_fj_per_bit for d in devs]
+    pad = np.arange(d_max)[None, :] >= n_dev[:, None]
+    fallback = (n_dev - 1)[:, None]
+
+    chunk = max(1, _MAX_BROADCAST_BYTES
+                // max(1, d_max * len(lt) * pol.broadcast_itemsize))
+    out = []
+    for lo in range(0, len(sets), chunk):
+        hi = min(lo + chunk, len(sets))
+        asg = pol.assign(PolicyBatch(
+            devs=tuple(sorted_devs[lo:hi]), ret_s=ret[lo:hi],
+            read_fj=read_fj[lo:hi], write_fj=write_fj[lo:hi],
+            pad=pad[lo:hi], fallback=fallback[lo:hi],
+            lt_s=lt, reads=reads, bits=bits, groups=groups))
+        for ci in range(lo, hi):
+            devs, dset = sorted_devs[ci], sets[ci]
+            ff = asg.lifetime_dev[ci - lo]
+            refresh = (None if asg.refresh_per_lifetime is None
+                       else asg.refresh_per_lifetime[ci - lo])
+            # The exact float accumulation order of the seed compose():
+            # per-device masked sums, accumulated cheapest-device first.
+            energy = 0.0
+            for i, d in enumerate(devs):
+                sel = ff == i
+                if refresh is None:
+                    energy += float(_energy_per_lifetime_j(
+                        d, reads[sel], bits[sel]).sum())
+                else:
+                    e_fj = (d.write_fj_per_bit * bits[sel]
+                            + d.read_fj_per_bit * reads[sel] * bits[sel]
+                            + refresh[sel] * d.refresh_energy_fj_per_bit()
+                            * bits[sel])
+                    energy += float((e_fj * 1e-15).sum())
+            if asg.addr_dev is not None:
+                ad = asg.addr_dev[ci - lo]
+                frac = np.array(
+                    [np.mean(ad == i) for i in range(len(devs))])
+            else:
+                frac = np.array(
+                    [w[ff == i].sum() for i in range(len(devs))])
+            frac, quant = pol.capacity(frac, devs)
+            mono = {d.name: mono_energy(d) for d in dset}
+            sram_e = mono["SRAM"]
+            area_um2, area_ratio = _area_accounting(
+                devs, frac, stats.capacity_bits)
+            out.append(Composition(
+                devices=tuple(d.name for d in devs),
+                capacity_fractions=frac,
+                energy_j=energy,
+                energy_vs_sram=energy / sram_e if sram_e > 0 else math.nan,
+                monolithic_energy_j=mono,
+                area_um2=area_um2,
+                area_vs_sram=area_ratio,
+                policy=pol.name,
+                quantization=quant,
+            ))
+    return out
+
+
+def compose(
+    stats: SubpartitionStats,
+    raw=None,
+    devices: Sequence[DeviceModel] = DEFAULT_DEVICES,
+    clock_hz: float = 1.0e9,
+    policy: AssignmentPolicy | str = "refresh-free",
+) -> Composition:
+    """Derive the composition for one subpartition under one policy —
+    the single-candidate entry into :func:`evaluate`."""
+    (comp,) = evaluate([tuple(devices)], stats, raw=raw,
+                       clock_hz=clock_hz, policy=policy)
+    return comp
+
+
+def composition_csv_rows(compositions: Mapping[str, Composition]) -> list:
+    """``subpartition,policy,area_vs_sram,energy_vs_sram,
+    capacity_fractions`` rows for a ``{subpartition: Composition}`` map
+    (header included) — the profile-report twin of
+    ``SweepResult.csv_rows()``, sharing its formatting conventions
+    (``%.9g`` ratios, ``dev:frac|...`` capacity maps, comma-safe
+    quoting)."""
+    import csv
+    import io
+    buf = io.StringIO()
+    w = csv.writer(buf, lineterminator="\n")
+    w.writerow(["subpartition", "policy", "area_vs_sram",
+                "energy_vs_sram", "capacity_fractions"])
+    for name, comp in compositions.items():
+        caps = "|".join(
+            f"{d}:{c:.6g}" for d, c in
+            zip(comp.devices, comp.capacity_fractions))
+        w.writerow([name, comp.policy, f"{comp.area_vs_sram:.9g}",
+                    f"{comp.energy_vs_sram:.9g}", caps])
+    return buf.getvalue().splitlines()

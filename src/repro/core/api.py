@@ -269,38 +269,46 @@ class ProfileSession:
 
     def compose(self, *,
                 devices: Sequence[DeviceModel | str] | None = None,
-                ) -> "ProfileSession":
+                policy="refresh-free") -> "ProfileSession":
         """Derive the heterogeneous composition for every subpartition and
-        attach it to the report (paper Table 7 / §7.1.5)."""
+        attach it to the report (paper Table 7 / §7.1.5).  ``policy=``
+        selects the assignment policy (``"refresh-free"`` default,
+        ``"refresh-aware"``, ``"bank-quantized[:<base>][@<n_banks>]"`` —
+        see :mod:`repro.compose`)."""
         if self._report is None:
             self.analyze()
         devs = resolve_devices(devices) if devices is not None \
             else self.devices
         for name, (st, raw) in self._stats.items():
             comp = compose_stats(st, raw=raw, devices=devs,
-                                 clock_hz=self._clock_hz)
+                                 clock_hz=self._clock_hz, policy=policy)
             self._compositions[name] = comp
-            self._report["subpartitions"][name]["composition"] = {
+            entry = {
                 "devices": list(comp.devices),
                 "capacity_fractions": comp.capacity_fractions.tolist(),
                 "energy_vs_sram": comp.energy_vs_sram,
                 "area_vs_sram": comp.area_vs_sram,
+                "policy": comp.policy,
             }
+            if comp.quantization is not None:
+                entry["quantization"] = comp.quantization
+            self._report["subpartitions"][name]["composition"] = entry
         return self
 
     def sweep(self, grid=None, *, workers: int = 1,
-              vectorized: bool = True, attach: bool = True):
+              policy="refresh-free", attach: bool = True):
         """Evaluate a composition design-space sweep over every analyzed
         subpartition and return the :class:`repro.sweep.SweepResult`
         (grid defaults to ``repro.sweep.DeviceGrid()``; auto-runs
-        ``analyze()`` if needed).
+        ``analyze()`` if needed).  ``policy=`` is the assignment policy
+        applied to every candidate.
 
         With ``attach=True`` the per-subpartition Pareto frontiers are
         also recorded under ``report()["sweep"]``.
         """
         from repro.sweep import SweepRunner
         self._require_analyzed()
-        runner = SweepRunner(grid, workers=workers, vectorized=vectorized)
+        runner = SweepRunner(grid, workers=workers, policy=policy)
         result = runner.run_session(self)
         if attach:
             self._report["sweep"] = {
@@ -320,24 +328,28 @@ class ProfileSession:
     def run(self, workload, *, mode: str | None = None,
             write_allocate: bool | None = None,
             devices: Sequence[DeviceModel | str] | None = None,
+            policy="refresh-free",
             report_path: str | None = None, **cfg) -> dict:
         """profile -> analyze -> compose -> report in one call.
 
         Analysis options are routed by stage instead of all landing on
         the backend: ``mode``/``devices`` go to ``analyze()``/
-        ``compose()``, everything else to ``profile()``.  An explicit
-        ``write_allocate`` goes to *both* — it is simultaneously a
-        cache-simulator policy and the frontend's write-miss semantics,
-        and the two must agree (paper Table 8 pairs them).
+        ``compose()``, ``policy`` to ``compose()``, everything else to
+        ``profile()``.  An explicit ``write_allocate`` goes to *both*
+        the frontend and — on cache-mode backends, where it is also a
+        simulator policy — the backend, so the two stay in agreement
+        (paper Table 8 pairs them); scratchpad backends have no
+        write-allocate knob and only the frontend semantics apply.
         """
-        if write_allocate is not None:
+        if write_allocate is not None and self.backend is not None \
+                and self.backend.mode == "cache":
             cfg["write_allocate"] = write_allocate
         self.profile(workload, **cfg)
         self.analyze(mode=mode,
                      write_allocate=(True if write_allocate is None
                                      else write_allocate),
                      devices=devices)
-        self.compose(devices=devices)
+        self.compose(devices=devices, policy=policy)
         return self.report(report_path)
 
     @classmethod

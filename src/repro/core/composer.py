@@ -1,15 +1,25 @@
 """Heterogeneous on-chip memory composition (paper §7.1.5, Table 7).
 
-Given lifetime statistics for a subpartition, assign every datum to the
-cheapest-energy device whose retention (at the observed write frequency)
-covers the datum's lifetime, so that the whole array operates refresh-free.
-Outputs capacity proportions per device and active energy vs an SRAM
-baseline and vs monolithic single-device arrays.
+Given lifetime statistics for a subpartition, assign every datum to a
+device under an assignment policy and report capacity proportions per
+device plus active energy/area vs an SRAM baseline and vs monolithic
+single-device arrays.  The assignment itself lives in the policy-driven
+engine (:mod:`repro.compose`) — this module is the single-candidate
+front door kept at its seed location:
+
+  ``policy="refresh-free"`` (default)  every datum on the cheapest
+      device whose retention covers it, so the array never refreshes —
+      the seed semantics, bit-for-bit.
+  ``policy="refresh-aware"``  minimum total-energy device per datum,
+      refresh billed per Algorithm 1.
+  ``policy="bank-quantized[:<base>][@<n_banks>]"``  capacity fractions
+      snapped to power-of-two bank granularity atop either base.
 
 Assignment granularity: the paper expresses compositions as *capacity*
-percentages, so we assign at address granularity using each address's
-maximum lifetime (an address must live on a device that can hold its
-longest-lived value refresh-free), while energy is accounted per lifetime.
+percentages, so capacity is assigned at address granularity (refresh-free
+hosts each address's longest-lived value refresh-free; refresh-aware
+minimizes the address's summed total energy), while energy is accounted
+per lifetime.
 
 Energy-accounting note: each lifetime is billed as one write (its
 initiating event) plus its reads.  In cache mode a lifetime may be
@@ -20,173 +30,39 @@ above the Algorithm-1 SRAM baseline on miss-heavy L2 traces).
 
 from __future__ import annotations
 
-import dataclasses
-import math
 from typing import Sequence
 
-import numpy as np
-
+from repro.compose.types import Composition
 from repro.core.devices import DEFAULT_DEVICES, DeviceModel
-from repro.core.frontend import SubpartitionStats, analyze_energy
-from repro.core.lifetime import LifetimeStats
+from repro.core.frontend import SubpartitionStats
 
+__all__ = ["Composition", "compose"]
 
-@dataclasses.dataclass(frozen=True)
-class Composition:
-    devices: tuple                      # device names, cheapest-energy first
-    capacity_fractions: np.ndarray      # per device, sums to 1
-    energy_j: float                     # hetero active energy (refresh-free)
-    energy_vs_sram: float               # ratio over monolithic SRAM
-    monolithic_energy_j: dict           # device -> monolithic energy (with refresh)
-    area_um2: float = 0.0               # hetero array area (capacity-weighted)
-    area_vs_sram: float = 1.0           # ratio over an all-SRAM array
-
-    def summary(self) -> str:
-        caps = " / ".join(
-            f"{d}:{100 * c:.1f}%" for d, c in
-            zip(self.devices, self.capacity_fractions))
-        return (f"[{caps}] E={self.energy_j:.3e} J "
-                f"({100 * self.energy_vs_sram:.1f}% of SRAM), "
-                f"A={100 * self.area_vs_sram:.1f}% of SRAM")
-
-
-def _access_energy_fj(device: DeviceModel) -> float:
-    """Refresh-free per-bit access energy: compose()'s device ordering key
-    (shared with the sweep engine, whose bit-for-bit contract depends on
-    using the identical key)."""
-    return device.read_fj_per_bit + device.write_fj_per_bit
-
-
-def _per_address_max_lifetime_s(raw, clock_hz: float) -> np.ndarray:
-    """Per-address maximum lifetime in seconds — compose()'s capacity rule
-    (an address must live on a device covering its longest-lived value).
-    Shared with the sweep engine, which computes it once per subpartition
-    and reuses it across every candidate device set."""
-    valid = np.asarray(raw.valid)
-    addr = np.asarray(raw.addr)[valid]
-    lt_cyc = np.asarray(raw.lifetime_cycles)[valid]
-    order = np.argsort(addr, kind="stable")
-    addr_s, lt_s_sorted = addr[order], lt_cyc[order]
-    new = np.concatenate([[True], addr_s[1:] != addr_s[:-1]])
-    grp = np.cumsum(new) - 1
-    max_lt = np.zeros(grp[-1] + 1 if len(grp) else 0)
-    np.maximum.at(max_lt, grp, lt_s_sorted)
-    return max_lt / clock_hz
-
-
-def _area_accounting(
-    devs: Sequence[DeviceModel],
-    frac: np.ndarray,
-    capacity_bits: float,
-) -> tuple[float, float]:
-    """(area_um2, area_vs_sram) of a capacity-weighted hetero array.
-
-    The baseline is the in-set SRAM device, so an all-SRAM composition is
-    exactly 1.0 whatever the SRAM cell model in use.
-    """
-    areas = np.array([d.area_um2_per_bit for d in devs])
-    per_bit = float((frac * areas).sum())
-    sram_per_bit = next(d.area_um2_per_bit for d in devs if d.name == "SRAM")
-    return per_bit * capacity_bits, per_bit / sram_per_bit
-
-
-def _energy_per_lifetime_j(
-    device: DeviceModel, reads: np.ndarray, bits: np.ndarray) -> np.ndarray:
-    """Refresh-free active energy of each lifetime on `device` (J).
-
-    Each lifetime = 1 write (its initiation) + n reads, at block granularity.
-    """
-    e_fj = (device.write_fj_per_bit * bits
-            + device.read_fj_per_bit * reads * bits)
-    return e_fj * 1e-15
+# Helpers that moved into the engine, re-exported for pre-refactor
+# imports.  Lazy (PEP 562) because an eager import here would deadlock
+# the `import repro.compose.engine` entry path: engine -> repro.core
+# package init -> this module -> engine (still mid-import).
+_ENGINE_HELPERS = ("_access_energy_fj", "_area_accounting",
+                   "_energy_per_lifetime_j", "_per_address_max_lifetime_s")
 
 
 def compose(
     stats: SubpartitionStats,
-    raw: LifetimeStats | None = None,
+    raw=None,
     devices: Sequence[DeviceModel] = DEFAULT_DEVICES,
     clock_hz: float = 1.0e9,
+    policy="refresh-free",
 ) -> Composition:
-    """Derive the optimal refresh-free composition for one subpartition."""
-    if not devices:
-        raise ValueError("compose() needs a non-empty device set")
-    if not any(d.name == "SRAM" for d in devices):
-        raise ValueError(
-            "compose() needs SRAM in the device set as the "
-            "infinite-retention baseline; got "
-            f"{sorted(d.name for d in devices)}")
-    lt = stats.lifetimes_s
-    bits = stats.lifetime_bits
-    reads = stats.accesses_per_lifetime - 1.0
+    """Derive the optimal composition for one subpartition under one
+    assignment policy (see :mod:`repro.compose`)."""
+    from repro.compose.engine import compose as _compose
+    return _compose(stats, raw=raw, devices=devices, clock_hz=clock_hz,
+                    policy=policy)
 
-    # Order devices by refresh-free per-bit access energy (cheapest first);
-    # SRAM (infinite retention) is always last resort.
-    devs = sorted(devices, key=_access_energy_fj)
-    retentions = np.array(
-        [d.retention_at(stats.write_freq_hz) for d in devs])
 
-    if len(lt) == 0:
-        # No valid lifetimes (empty trace, or every segment dead under
-        # no-write-allocate).  The monolithic baselines still exist: the
-        # accesses themselves cost energy even if no datum ever lived.
-        frac = np.zeros(len(devs))
-        frac[-1] = 1.0
-        mono = {d.name: analyze_energy(stats, d)[0] for d in devices}
-        sram_e = mono["SRAM"]
-        area_um2, area_ratio = _area_accounting(
-            devs, frac, stats.capacity_bits)
-        return Composition(
-            devices=tuple(d.name for d in devs),
-            capacity_fractions=frac,
-            energy_j=0.0,
-            energy_vs_sram=0.0 / sram_e if sram_e > 0 else math.nan,
-            monolithic_energy_j=mono,
-            area_um2=area_um2,
-            area_vs_sram=area_ratio,
-        )
-
-    # Per-lifetime assignment: first (cheapest) device that covers it.
-    fits = lt[None, :] <= retentions[:, None]          # [dev, lifetime]
-    first_fit = np.argmax(fits, axis=0)                # cheapest fitting dev
-    any_fit = fits.any(axis=0)
-    first_fit = np.where(any_fit, first_fit, len(devs) - 1)
-
-    # Energy: each lifetime billed at its device's access energies.
-    energy = 0.0
-    for i, d in enumerate(devs):
-        sel = first_fit == i
-        energy += float(_energy_per_lifetime_j(d, reads[sel], bits[sel]).sum())
-
-    # Capacity: per-address max lifetime decides the hosting device.
-    # stats carries only aggregated lifetimes; recover per-address maxima
-    # through the raw LifetimeStats when provided, else approximate with
-    # per-lifetime bits (upper bound on footprint).
-    if raw is not None:
-        max_lt_s = _per_address_max_lifetime_s(raw, clock_hz)
-        addr_fits = max_lt_s[None, :] <= retentions[:, None]
-        addr_dev = np.argmax(addr_fits, axis=0)
-        addr_dev = np.where(addr_fits.any(axis=0), addr_dev, len(devs) - 1)
-        frac = np.array(
-            [np.mean(addr_dev == i) for i in range(len(devs))])
-    else:
-        w = bits / bits.sum()
-        frac = np.array(
-            [w[first_fit == i].sum() for i in range(len(devs))])
-
-    # Baselines: monolithic arrays (with refresh energy where needed).
-    mono = {}
-    for d in devices:
-        e, _ = analyze_energy(stats, d)
-        mono[d.name] = e
-    sram_e = mono["SRAM"]
-    area_um2, area_ratio = _area_accounting(devs, frac, stats.capacity_bits)
-
-    return Composition(
-        devices=tuple(d.name for d in devs),
-        capacity_fractions=frac,
-        energy_j=energy,
-        energy_vs_sram=energy / sram_e if sram_e > 0 else math.nan,
-        monolithic_energy_j=mono,
-        area_um2=area_um2,
-        area_vs_sram=area_ratio,
-    )
+def __getattr__(name):
+    if name in _ENGINE_HELPERS:
+        from repro.compose import engine
+        return getattr(engine, name)
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")

@@ -1,1 +1,8 @@
 """Launchers: production mesh, dry-run, training, serving, profiling."""
+
+
+def parse_floats(csv: str) -> tuple:
+    """``"0.5,1,2" -> (0.5, 1.0, 2.0)`` — the CLI axis-flag parser
+    shared by the sweep and campaign drivers (stdlib-only: campaign
+    planning imports it)."""
+    return tuple(float(v) for v in csv.split(",") if v.strip())

@@ -24,7 +24,8 @@ and interrupted campaigns resume: only jobs whose artifact is missing
   PYTHONPATH=src python -m repro campaign --dry-run      # plan only, CI
 
 Import contract: planning (``--dry-run``, cache-key computation) uses
-only ``repro.workloads`` + stdlib; backends/JAX load only when jobs
+only ``repro.workloads`` + ``repro.compose.policies`` (numpy + stdlib,
+for policy-spec validation) + stdlib; backends/JAX load only when jobs
 actually execute.
 """
 
@@ -39,10 +40,11 @@ import os
 import tempfile
 from typing import Mapping, Sequence
 
+from repro.launch import parse_floats as _floats
 from repro.workloads import (canonical_backend, get_workload,
                              resolve_workloads)
 
-SCHEMA_VERSION = 1
+SCHEMA_VERSION = 2    # v2: assignment policy in the cache key + artifact
 
 # Default retention bins: Si-GCRAM (1 us) and Hybrid-GCRAM (10 us) —
 # repro.core.devices values, kept literal so planning stays jax-free.
@@ -83,6 +85,7 @@ class _AggPoint:
     area_vs_sram: float
     energy_vs_sram: float
     n_workloads: int
+    policy: str = "refresh-free"
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -144,6 +147,10 @@ class CampaignRunner:
         ``energy_scales`` / ``per_mix``), or ``None`` to skip sweeps.
     devices : device set for analyze/compose (names or DeviceModels);
         names only are recorded in the cache key.
+    policy : assignment-policy spec for compose() and the per-job
+        sweep (``repro.compose.get_policy`` grammar); the canonical
+        policy name is a cache-key component, so changing policy never
+        reuses another policy's artifacts.
     """
 
     def __init__(self, workloads, backends: Sequence[str], *,
@@ -153,8 +160,11 @@ class CampaignRunner:
                  backend_cfg: Mapping[str, Mapping] | None = None,
                  retention_bins: Sequence[float] = DEFAULT_RETENTION_BINS,
                  sweep_axes: Mapping | None = DEFAULT_SWEEP_AXES,
-                 devices: Sequence[str] | None = None):
+                 devices: Sequence[str] | None = None,
+                 policy: str = "refresh-free"):
+        from repro.compose.policies import get_policy
         self.workloads = resolve_workloads(workloads)
+        self.policy = get_policy(policy).name    # canonical, validated
         self.backends = tuple(dict.fromkeys(
             canonical_backend(b.strip()) for b in (
                 backends.split(",") if isinstance(backends, str)
@@ -191,6 +201,7 @@ class CampaignRunner:
             "devices": list(self.devices) if self.devices else None,
             "retention_bins": list(self.retention_bins),
             "sweep": self.sweep_axes,
+            "policy": self.policy,
         }
         return hashlib.sha256(
             json.dumps(payload, sort_keys=True,
@@ -234,7 +245,8 @@ class CampaignRunner:
         workload, cfg = spec.build(job.backend)
         cfg = {**cfg, **dict(job.cfg)}
         session = ProfileSession(job.backend, devices=self.devices)
-        session.profile(workload, **cfg).analyze().compose()
+        session.profile(workload, **cfg).analyze()
+        session.compose(policy=self.policy)
         report = session.report()
 
         short_lived: dict = {}
@@ -249,10 +261,12 @@ class CampaignRunner:
         if self.sweep_axes:
             from repro.sweep import DeviceGrid
             grid = DeviceGrid(**self.sweep_axes)
-            result = session.sweep(grid, attach=False)
+            result = session.sweep(grid, attach=False,
+                                   policy=self.policy)
             sweep_points = [
                 {"candidate": p.candidate,
                  "subpartition": p.subpartition,
+                 "policy": p.policy,
                  "area_vs_sram": float(p.area_vs_sram),
                  "energy_vs_sram": float(p.energy_vs_sram)}
                 for p in result.points]
@@ -260,6 +274,7 @@ class CampaignRunner:
         return {"schema": SCHEMA_VERSION, "key": job.key,
                 "workload": job.workload, "backend": job.backend,
                 "params": dict(job.params), "cfg": dict(job.cfg),
+                "policy": self.policy,
                 "report": report, "accesses": accesses,
                 "short_lived": short_lived,
                 "sweep_points": sweep_points}
@@ -338,6 +353,7 @@ class CampaignRunner:
             "campaign": {
                 "workloads": list(self.workloads),
                 "backends": list(self.backends),
+                "policy": self.policy,
                 "retention_bins_s": list(self.retention_bins),
                 "n_jobs": len(jobs),
                 "executed": sum(1 for c in cached if not c),
@@ -379,7 +395,7 @@ class CampaignRunner:
             groups.setdefault((backend, sub), []).append(_AggPoint(
                 candidate=cand, subpartition=sub,
                 area_vs_sram=wa / w, energy_vs_sram=we / w,
-                n_workloads=n))
+                n_workloads=n, policy=self.policy))
         if not groups:
             return {}
         from repro.sweep.pareto import pareto_frontier
@@ -390,10 +406,6 @@ class CampaignRunner:
 # ---------------------------------------------------------------------------
 # CLI
 # ---------------------------------------------------------------------------
-
-def _floats(csv: str) -> tuple:
-    return tuple(float(v) for v in csv.split(",") if v.strip())
-
 
 def main(argv=None):
     ap = argparse.ArgumentParser(
@@ -428,6 +440,11 @@ def main(argv=None):
     ap.add_argument("--no-sweep", action="store_true",
                     help="skip the per-job composition sweep (no suite "
                          "frontiers)")
+    ap.add_argument("--policy", default="refresh-free",
+                    help="assignment policy for compose() and the "
+                         "per-job sweep: refresh-free | refresh-aware | "
+                         "bank-quantized[:<base>][@<n_banks>] (part of "
+                         "the trace-cache key)")
     ap.add_argument("--out", default=None,
                     help="aggregate JSON path (default: "
                          "<cache-dir>/campaign_report.json)")
@@ -448,10 +465,11 @@ def main(argv=None):
         backend_cfg={"systolic": {"rows": args.pe, "cols": args.pe,
                                   "dataflow": args.dataflow}},
         retention_bins=_floats(args.retention_bins),
-        sweep_axes=sweep_axes)
+        sweep_axes=sweep_axes, policy=args.policy)
 
     jobs = runner.plan()
     if args.dry_run:
+        print(f"campaign plan: policy={runner.policy}")
         print(f"{'workload':22s} {'backend':10s} {'cache key':14s} "
               f"{'state'}")
         for job in jobs:

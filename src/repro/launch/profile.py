@@ -43,8 +43,9 @@ def _tpu_workload(cfg, seq):
     return tpu_step_workload(cfg, seq)
 
 
-def _summarize(session: ProfileSession, out: str | None) -> dict:
-    """Console summary + composition entries + optional JSON dump."""
+def _summarize(session: ProfileSession, out: str | None,
+               csv_out: str | None = None) -> dict:
+    """Console summary + composition entries + optional JSON/CSV dump."""
     report = session.report()
     print(json.dumps(
         {k: {kk: vv for kk, vv in v.items() if kk != "devices"}
@@ -60,7 +61,19 @@ def _summarize(session: ProfileSession, out: str | None) -> dict:
     if out:
         session.report(out)
         print(f"report -> {out}")
+    if csv_out:
+        _write_composition_csv(session, csv_out)
     return report
+
+
+def _write_composition_csv(session: ProfileSession, csv_out: str) -> None:
+    """Machine-readable composition report (sweep CSV conventions)."""
+    from repro.compose import composition_csv_rows
+    comps = {name: session.composition(name)
+             for name in session.report()["subpartitions"]}
+    with open(csv_out, "w") as f:
+        f.write("\n".join(composition_csv_rows(comps)) + "\n")
+    print(f"csv -> {csv_out}")
 
 
 # ---------------------------------------------------------------------------
@@ -97,7 +110,8 @@ def profile_tpu(cfg, seq, out):
 _DRY_SEQ = 16
 
 
-def _dry_run(backend: str) -> dict:
+def _dry_run(backend: str, policy: str = "refresh-free",
+             csv_out: str | None = None) -> dict:
     """Minimal end-to-end pipeline smoke for CI: tiny built-in workload."""
     session = ProfileSession(backend)
     name = session.backend.name
@@ -114,11 +128,13 @@ def _dry_run(backend: str) -> dict:
         import jax.numpy as jnp
         x = jax.ShapeDtypeStruct((_DRY_SEQ, _DRY_SEQ), jnp.float32)
         session.profile((lambda a: (a @ a).sum(), x))
-    report = session.analyze().compose().report()
+    report = session.analyze().compose(policy=policy).report()
     subs = report["subpartitions"]
     events = sum(v["n_reads"] + v["n_writes"] for v in subs.values())
     print(f"dry-run ok: backend={name} subpartitions={sorted(subs)} "
-          f"events={events}")
+          f"events={events} policy={policy}")
+    if csv_out:
+        _write_composition_csv(session, csv_out)
     return report
 
 
@@ -152,6 +168,13 @@ def main(argv=None):
     ap.add_argument("--pe", type=int, default=128)
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--out", default=None)
+    ap.add_argument("--csv", default=None,
+                    help="composition-report CSV path (subpartition,"
+                         "policy,area_vs_sram,energy_vs_sram,"
+                         "capacity_fractions)")
+    ap.add_argument("--policy", default="refresh-free",
+                    help="assignment policy: refresh-free | refresh-aware"
+                         " | bank-quantized[:<base>][@<n_banks>]")
     ap.add_argument("--chunk-events", type=int, default=None,
                     help="stream the trace to the frontend in chunks of "
                          "this many events (bounded-memory analysis)")
@@ -160,7 +183,8 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     if args.dry_run:
-        return _dry_run(args.backend)
+        return _dry_run(args.backend, policy=args.policy,
+                        csv_out=args.csv)
 
     workload, cfg = build_workload(args.arch, args.backend, seq=args.seq,
                                    smoke=args.smoke)
@@ -171,8 +195,8 @@ def main(argv=None):
         cfg["chunk_events"] = args.chunk_events
     session = ProfileSession(args.backend)
     session.profile(workload, **cfg)
-    session.analyze().compose()
-    return _summarize(session, args.out)
+    session.analyze().compose(policy=args.policy)
+    return _summarize(session, args.out, args.csv)
 
 
 if __name__ == "__main__":

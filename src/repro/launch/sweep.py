@@ -19,11 +19,8 @@ import argparse
 import json
 
 from repro.core import ProfileSession
+from repro.launch import parse_floats as _floats
 from repro.sweep import DeviceGrid, SweepRunner
-
-
-def _floats(csv: str) -> tuple:
-    return tuple(float(v) for v in csv.split(",") if v.strip())
 
 
 def _grid_from_args(args) -> DeviceGrid:
@@ -103,9 +100,9 @@ def main(argv=None):
                          "(gpu/cachesim backends), e.g. 64:4,128:8")
     ap.add_argument("--workers", type=int, default=1,
                     help="threads for the outer subpartition/geometry loop")
-    ap.add_argument("--naive", action="store_true",
-                    help="per-candidate compose() loop (differential "
-                         "oracle; the batched engine is the default)")
+    ap.add_argument("--policy", default="refresh-free",
+                    help="assignment policy: refresh-free | refresh-aware"
+                         " | bank-quantized[:<base>][@<n_banks>]")
     ap.add_argument("--out", default=None, help="JSON output path")
     ap.add_argument("--csv", default=None, help="CSV output path")
     ap.add_argument("--dry-run", action="store_true",
@@ -113,13 +110,11 @@ def main(argv=None):
     args = ap.parse_args(argv)
 
     grid = _grid_from_args(args)
-    runner = SweepRunner(grid, workers=args.workers,
-                         vectorized=not args.naive)
+    runner = SweepRunner(grid, workers=args.workers, policy=args.policy)
     workload, cfg = _workload(args)
     geoms = _geometries(args)
     print(f"sweep: backend={args.backend} grid={len(grid)} candidates "
-          f"({'naive' if args.naive else 'batched'}, "
-          f"workers={args.workers})")
+          f"(policy={runner.policy.name}, workers={args.workers})")
 
     if geoms:
         if args.backend not in ("gpu", "cachesim"):

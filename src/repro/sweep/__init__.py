@@ -6,9 +6,10 @@ device design space.  This package explores that space:
 
   grid     - ``DeviceGrid``: candidate device sets from retention / area /
              energy scaling axes + parametric Si<->Hybrid interpolation
-  runner   - ``SweepRunner``: batched ``compose()`` over grid x
-             subpartitions x cache geometries (vectorized lifetime-fit
-             assignment, thread-parallel outer loop)
+  runner   - ``SweepRunner``: the shared ``repro.compose`` engine over
+             grid x subpartitions x cache geometries (one batched policy
+             kernel per subpartition, ``policy=`` selectable,
+             thread-parallel outer loop)
   pareto   - ``ParetoFrontier``: dominated-free (area, energy) curves
              with the all-SRAM anchor
 

@@ -1,26 +1,18 @@
-"""Sweep execution: evaluate ``compose()`` across a ``DeviceGrid``.
+"""Sweep execution: evaluate the composition engine across a ``DeviceGrid``.
 
-Two evaluation paths produce bit-for-bit identical ``Composition``
-objects (``tests/test_sweep.py`` locks the equivalence against
-``repro.core.composer.compose`` itself):
+The batched datum→device assignment lives in :mod:`repro.compose` now —
+``SweepRunner`` feeds the whole candidate grid into one
+:func:`repro.compose.engine.evaluate` call per subpartition, so the
+sweep carries **no assignment broadcast of its own** and is bit-for-bit
+identical to per-candidate ``compose()`` by construction (the engine is
+the same code path; ``tests/test_sweep.py`` and
+``tests/test_compose_policies.py`` lock it anyway, the latter against a
+frozen copy of the pre-refactor scalar implementation).
 
-``vectorized`` (default)
-    The per-candidate work in ``compose()`` is dominated by three
-    things that do not actually depend on the candidate's devices: the
-    per-address max-lifetime grouping (an argsort over the raw
-    lifetimes), the lifetime-fit broadcast, and the monolithic
-    baselines of shared devices (SRAM appears in *every* candidate).
-    The batched path computes the address grouping once per
-    subpartition, evaluates the ``fits = lt <= retentions`` assignment
-    for **all** candidates in one NumPy broadcast (``[candidate,
-    device, lifetime]``, chunked to bound memory), and memoizes
-    monolithic baselines by device — only the float reductions that
-    define ``compose()``'s exact summation order remain per-candidate.
-
-``naive``
-    ``compose()`` in a Python loop over candidates.  Kept as the
-    differential oracle and as the benchmark baseline
-    (``python -m benchmarks.run --only sweep`` times both).
+Every entry point takes ``policy=`` (``"refresh-free"`` default,
+``"refresh-aware"``, ``"bank-quantized[:<base>][@<n_banks>]"`` — see
+``repro.compose.get_policy``), which flows into the evaluated
+compositions, the ``SweepPoint`` schema, and the CSV/JSON exports.
 
 The outer loop over subpartitions (and cache geometries, via
 :meth:`SweepRunner.run_geometries`) is thread-parallel under
@@ -33,20 +25,11 @@ import dataclasses
 from concurrent.futures import ThreadPoolExecutor
 from typing import Mapping, Sequence
 
-import numpy as np
-
-from repro.core.composer import (Composition, _access_energy_fj,
-                                 _area_accounting, _energy_per_lifetime_j,
-                                 _per_address_max_lifetime_s, compose)
-from repro.core.devices import DeviceModel
-from repro.core.frontend import SubpartitionStats, analyze_energy
+from repro.compose.engine import evaluate as _engine_evaluate
+from repro.compose.types import Composition
+from repro.core.frontend import SubpartitionStats
 from repro.sweep.grid import Candidate, DeviceGrid
 from repro.sweep.pareto import ParetoFrontier, pareto_frontier
-
-# Cap on candidate-chunk broadcast size (bools): candidates x devices x
-# lifetimes per chunk.  256 MB of bool keeps the fit matrix cache-friendly
-# without limiting total grid size.
-_MAX_BROADCAST_ELEMS = 256 * 1024 * 1024
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +40,7 @@ class SweepPoint:
     composition: Composition
     params: dict = dataclasses.field(default_factory=dict)
     geometry: str | None = None
+    policy: str = "refresh-free"
 
     @property
     def area_vs_sram(self) -> float:
@@ -72,6 +56,7 @@ class SweepPoint:
             "candidate": self.candidate,
             "subpartition": self.subpartition,
             "geometry": self.geometry,
+            "policy": self.policy,
             "area_vs_sram": comp.area_vs_sram,
             "energy_vs_sram": comp.energy_vs_sram,
             "area_um2": comp.area_um2,
@@ -119,9 +104,10 @@ class SweepResult:
                 "frontiers": entry}
 
     def csv_rows(self) -> list:
-        """``geometry,subpartition,candidate,area_vs_sram,energy_vs_sram,
-        on_frontier,capacity_fractions`` rows (header included; fields
-        holding commas — candidate ids, capacity maps — are quoted)."""
+        """``geometry,subpartition,candidate,policy,area_vs_sram,
+        energy_vs_sram,on_frontier,capacity_fractions`` rows (header
+        included; fields holding commas — candidate ids, capacity maps —
+        are quoted)."""
         import csv
         import io
         on_front = set()
@@ -130,7 +116,7 @@ class SweepResult:
                 on_front.add((geom, sub, p.candidate))
         buf = io.StringIO()
         w = csv.writer(buf, lineterminator="\n")
-        w.writerow(["geometry", "subpartition", "candidate",
+        w.writerow(["geometry", "subpartition", "candidate", "policy",
                     "area_vs_sram", "energy_vs_sram", "on_frontier",
                     "capacity_fractions"])
         for p in self.points:
@@ -140,13 +126,13 @@ class SweepResult:
                     p.composition.capacity_fractions))
             front = (p.geometry, p.subpartition, p.candidate) in on_front
             w.writerow([p.geometry or "", p.subpartition, p.candidate,
-                        f"{p.area_vs_sram:.9g}",
+                        p.policy, f"{p.area_vs_sram:.9g}",
                         f"{p.energy_vs_sram:.9g}", int(front), caps])
         return buf.getvalue().splitlines()
 
 
 # ---------------------------------------------------------------------------
-# batched candidate evaluation
+# batched candidate evaluation (thin wrapper over the shared engine)
 # ---------------------------------------------------------------------------
 
 def evaluate_candidates(
@@ -154,98 +140,14 @@ def evaluate_candidates(
     stats: SubpartitionStats,
     raw=None,
     clock_hz: float = 1.0e9,
+    policy="refresh-free",
 ) -> list:
-    """``[compose(stats, raw, c.devices, clock_hz) for c in candidates]``
-    with the candidate loop batched (see module docstring).  Bit-for-bit
-    identical to calling ``compose()`` per candidate.
-
-    Candidates are processed in chunks end-to-end (fit broadcast and
-    reductions alike), so peak memory is bounded by
-    ``chunk x devices x lifetimes`` (~``_MAX_BROADCAST_ELEMS``) however
-    large the grid."""
-    candidates = list(candidates)
-    if not candidates:
-        return []
-    lt = stats.lifetimes_s
-    if len(lt) == 0:
-        # Degenerate subpartition: compose()'s empty branch is already
-        # O(devices), nothing to batch.
-        return [compose(stats, raw=raw, devices=c.devices,
-                        clock_hz=clock_hz) for c in candidates]
-
-    bits = stats.lifetime_bits
-    reads = stats.accesses_per_lifetime - 1.0
-    if raw is not None:
-        max_lt_s = _per_address_max_lifetime_s(raw, clock_hz)
-    else:
-        max_lt_s = None
-        w = bits / bits.sum()
-
-    # Monolithic baselines depend on (stats, device); within this one
-    # subpartition they are memoized by device — SRAM is shared by every
-    # candidate, scale variants recur across mixes.
-    mono_cache: dict = {}
-
-    def mono_energy(d: DeviceModel) -> float:
-        if d not in mono_cache:
-            mono_cache[d] = analyze_energy(stats, d)[0]
-        return mono_cache[d]
-
-    sorted_devs = [sorted(c.devices, key=_access_energy_fj)
-                   for c in candidates]
-    n_dev = np.array([len(ds) for ds in sorted_devs])
-    d_max = int(n_dev.max())
-
-    # Padded retention matrix ([candidate, device], small): -inf rows
-    # never fit, so padded device slots are transparent to the argmax.
-    ret = np.full((len(candidates), d_max), -np.inf)
-    for ci, devs in enumerate(sorted_devs):
-        ret[ci, :len(devs)] = [d.retention_at(stats.write_freq_hz)
-                               for d in devs]
-    fallback = (n_dev - 1)[:, None]
-
-    chunk = max(1, _MAX_BROADCAST_ELEMS // max(1, d_max * len(lt)))
-    out = []
-    for lo in range(0, len(candidates), chunk):
-        hi = min(lo + chunk, len(candidates))
-        fits = lt[None, None, :] <= ret[lo:hi, :, None]   # [c, dev, lt]
-        first_fit = np.where(fits.any(axis=1),
-                             np.argmax(fits, axis=1), fallback[lo:hi])
-        if max_lt_s is not None:
-            afits = max_lt_s[None, None, :] <= ret[lo:hi, :, None]
-            addr_dev = np.where(afits.any(axis=1),
-                                np.argmax(afits, axis=1), fallback[lo:hi])
-        for ci in range(lo, hi):
-            cand, devs = candidates[ci], sorted_devs[ci]
-            ff = first_fit[ci - lo]
-            # compose()'s exact float accumulation order: per-device
-            # masked sums, accumulated cheapest-device first.
-            energy = 0.0
-            for i, d in enumerate(devs):
-                sel = ff == i
-                energy += float(_energy_per_lifetime_j(
-                    d, reads[sel], bits[sel]).sum())
-            if max_lt_s is not None:
-                ad = addr_dev[ci - lo]
-                frac = np.array(
-                    [np.mean(ad == i) for i in range(len(devs))])
-            else:
-                frac = np.array(
-                    [w[ff == i].sum() for i in range(len(devs))])
-            mono = {d.name: mono_energy(d) for d in cand.devices}
-            sram_e = mono["SRAM"]
-            area_um2, area_ratio = _area_accounting(
-                devs, frac, stats.capacity_bits)
-            out.append(Composition(
-                devices=tuple(d.name for d in devs),
-                capacity_fractions=frac,
-                energy_j=energy,
-                energy_vs_sram=energy / sram_e if sram_e > 0 else np.nan,
-                monolithic_energy_j=mono,
-                area_um2=area_um2,
-                area_vs_sram=area_ratio,
-            ))
-    return out
+    """``[compose(stats, raw, c.devices, clock_hz, policy) for c in
+    candidates]`` with the candidate loop batched by the shared engine
+    (:func:`repro.compose.engine.evaluate`) — identical results, one
+    broadcast."""
+    return _engine_evaluate([c.devices for c in candidates], stats,
+                            raw=raw, clock_hz=clock_hz, policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -255,16 +157,18 @@ def evaluate_candidates(
 class SweepRunner:
     """Evaluate a ``DeviceGrid`` over subpartitions (x cache geometries).
 
-    ``workers > 1`` thread-parallelizes the outer (subpartition /
-    geometry) loop; results are returned in deterministic submission
-    order regardless of completion order.
+    ``policy=`` selects the assignment policy for every evaluated
+    candidate.  ``workers > 1`` thread-parallelizes the outer
+    (subpartition / geometry) loop; results are returned in
+    deterministic submission order regardless of completion order.
     """
 
     def __init__(self, grid: DeviceGrid | None = None, *,
-                 workers: int = 1, vectorized: bool = True):
+                 workers: int = 1, policy="refresh-free"):
+        from repro.compose import get_policy
         self.grid = grid if grid is not None else DeviceGrid()
         self.workers = max(1, int(workers))
-        self.vectorized = vectorized
+        self.policy = get_policy(policy)
 
     # -- one subpartition ------------------------------------------------
     def run_stats(self, stats: SubpartitionStats, raw=None, *,
@@ -272,16 +176,12 @@ class SweepRunner:
                   subpartition: str | None = None,
                   geometry: str | None = None) -> list:
         cands = self.grid.candidates()
-        if self.vectorized:
-            comps = evaluate_candidates(cands, stats, raw=raw,
-                                        clock_hz=clock_hz)
-        else:
-            comps = [compose(stats, raw=raw, devices=c.devices,
-                             clock_hz=clock_hz) for c in cands]
+        comps = evaluate_candidates(cands, stats, raw=raw,
+                                    clock_hz=clock_hz, policy=self.policy)
         name = subpartition if subpartition is not None else stats.name
         return [SweepPoint(candidate=c.cid, subpartition=name,
                            composition=comp, params=c.params,
-                           geometry=geometry)
+                           geometry=geometry, policy=comp.policy)
                 for c, comp in zip(cands, comps)]
 
     # -- all subpartitions of an analyzed session ------------------------

@@ -80,6 +80,7 @@ def _handwired_report(trace, kernels, mode):
             "capacity_fractions": comp.capacity_fractions.tolist(),
             "energy_vs_sram": comp.energy_vs_sram,
             "area_vs_sram": comp.area_vs_sram,
+            "policy": comp.policy,
         }
     return report
 

@@ -235,6 +235,25 @@ def test_session_run_write_allocate_reaches_backend_and_frontend():
         got["subpartitions"], sort_keys=True)
 
 
+def test_session_run_write_allocate_on_scratchpad_backend():
+    """Scratchpad backends have no write-allocate simulator knob: an
+    explicit write_allocate= must reach only the frontend instead of
+    crashing the backend config (pre-fix: TypeError on SystolicConfig)."""
+    from repro.backends.systolic import GemmLayer
+    from repro.core import ProfileSession
+
+    layers = [GemmLayer("g", 32, 32, 32)]
+    got = ProfileSession("systolic").run(layers, rows=16, cols=16,
+                                         write_allocate=False)
+    assert got["write_allocate"] is False
+    staged = ProfileSession("systolic")
+    staged.profile(layers, rows=16, cols=16)
+    staged.analyze(write_allocate=False).compose()
+    want = staged.report()
+    assert json.dumps(got, sort_keys=True) == json.dumps(
+        want, sort_keys=True)
+
+
 def test_session_run_defaults_unchanged():
     from repro.backends.systolic import GemmLayer
     from repro.core import ProfileSession

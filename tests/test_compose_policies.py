@@ -1,0 +1,506 @@
+"""Tests for the policy-driven composition engine (``repro.compose``).
+
+The locked contracts:
+  - ``policy="refresh-free"`` is bit-for-bit identical to the
+    *pre-refactor* scalar ``compose()`` — a frozen copy of the seed
+    implementation lives in this file as the oracle;
+  - device ordering is deterministic under access-energy ties
+    (``(energy, name)`` sort key — the satellite fix);
+  - ``refresh-aware`` bills refresh per Algorithm 1, never exceeds
+    refresh-free energy, and strictly beats it when mid-retention
+    lifetimes exist;
+  - ``bank-quantized`` snaps capacity up to power-of-two bank
+    granularity with non-negative slack, composable on either base;
+  - policy specs parse (and fail) per the documented grammar;
+  - ``policy=`` threads through ``ProfileSession`` and the CLIs.
+"""
+
+import dataclasses
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.backends.systolic import GemmLayer
+from repro.compose import (BankQuantizedPolicy, RefreshAwarePolicy,
+                           RefreshFreePolicy, available_policies,
+                           composition_csv_rows, evaluate, get_policy)
+from repro.core import (DEFAULT_DEVICES, HYBRID_GCRAM, SI_GCRAM, SRAM,
+                        DeviceModel, ProfileSession, compose,
+                        compute_stats, lifetimes_of_trace, make_trace)
+from repro.core.frontend import SubpartitionStats, analyze_energy
+from repro.sweep import DeviceGrid
+
+
+# ---------------------------------------------------------------------------
+# the frozen pre-refactor compose(): the bit-for-bit oracle
+# ---------------------------------------------------------------------------
+
+def _seed_compose(stats, raw=None, devices=DEFAULT_DEVICES,
+                  clock_hz=1.0e9):
+    """Verbatim copy of the seed scalar ``compose()`` (pre policy-engine
+    refactor), kept frozen here as the refresh-free bit-for-bit oracle.
+    The one deliberate difference vs the seed: the deterministic
+    ``(energy, name)`` sort key, which is identical whenever access
+    energies are distinct (as they are for every device set used with
+    this oracle)."""
+    def _access_energy_fj(device):
+        return device.read_fj_per_bit + device.write_fj_per_bit
+
+    def _per_address_max_lifetime_s(raw, clock_hz):
+        valid = np.asarray(raw.valid)
+        addr = np.asarray(raw.addr)[valid]
+        lt_cyc = np.asarray(raw.lifetime_cycles)[valid]
+        order = np.argsort(addr, kind="stable")
+        addr_s, lt_s_sorted = addr[order], lt_cyc[order]
+        new = np.concatenate([[True], addr_s[1:] != addr_s[:-1]])
+        grp = np.cumsum(new) - 1
+        max_lt = np.zeros(grp[-1] + 1 if len(grp) else 0)
+        np.maximum.at(max_lt, grp, lt_s_sorted)
+        return max_lt / clock_hz
+
+    def _energy_per_lifetime_j(device, reads, bits):
+        e_fj = (device.write_fj_per_bit * bits
+                + device.read_fj_per_bit * reads * bits)
+        return e_fj * 1e-15
+
+    def _area_accounting(devs, frac, capacity_bits):
+        areas = np.array([d.area_um2_per_bit for d in devs])
+        per_bit = float((frac * areas).sum())
+        sram_per_bit = next(d.area_um2_per_bit for d in devs
+                            if d.name == "SRAM")
+        return per_bit * capacity_bits, per_bit / sram_per_bit
+
+    lt = stats.lifetimes_s
+    bits = stats.lifetime_bits
+    reads = stats.accesses_per_lifetime - 1.0
+    devs = sorted(devices, key=_access_energy_fj)
+    retentions = np.array(
+        [d.retention_at(stats.write_freq_hz) for d in devs])
+
+    if len(lt) == 0:
+        frac = np.zeros(len(devs))
+        frac[-1] = 1.0
+        mono = {d.name: analyze_energy(stats, d)[0] for d in devices}
+        sram_e = mono["SRAM"]
+        area_um2, area_ratio = _area_accounting(
+            devs, frac, stats.capacity_bits)
+        return dict(devices=tuple(d.name for d in devs),
+                    capacity_fractions=frac, energy_j=0.0,
+                    energy_vs_sram=0.0 / sram_e if sram_e > 0
+                    else math.nan,
+                    monolithic_energy_j=mono, area_um2=area_um2,
+                    area_vs_sram=area_ratio)
+
+    fits = lt[None, :] <= retentions[:, None]
+    first_fit = np.argmax(fits, axis=0)
+    any_fit = fits.any(axis=0)
+    first_fit = np.where(any_fit, first_fit, len(devs) - 1)
+
+    energy = 0.0
+    for i, d in enumerate(devs):
+        sel = first_fit == i
+        energy += float(
+            _energy_per_lifetime_j(d, reads[sel], bits[sel]).sum())
+
+    if raw is not None:
+        max_lt_s = _per_address_max_lifetime_s(raw, clock_hz)
+        addr_fits = max_lt_s[None, :] <= retentions[:, None]
+        addr_dev = np.argmax(addr_fits, axis=0)
+        addr_dev = np.where(addr_fits.any(axis=0), addr_dev,
+                            len(devs) - 1)
+        frac = np.array(
+            [np.mean(addr_dev == i) for i in range(len(devs))])
+    else:
+        w = bits / bits.sum()
+        frac = np.array(
+            [w[first_fit == i].sum() for i in range(len(devs))])
+
+    mono = {}
+    for d in devices:
+        e, _ = analyze_energy(stats, d)
+        mono[d.name] = e
+    sram_e = mono["SRAM"]
+    area_um2, area_ratio = _area_accounting(devs, frac,
+                                            stats.capacity_bits)
+    return dict(devices=tuple(d.name for d in devs),
+                capacity_fractions=frac, energy_j=energy,
+                energy_vs_sram=energy / sram_e if sram_e > 0
+                else math.nan,
+                monolithic_energy_j=mono, area_um2=area_um2,
+                area_vs_sram=area_ratio)
+
+
+def _assert_matches_seed(comp, ref: dict):
+    assert comp.devices == ref["devices"]
+    assert np.array_equal(comp.capacity_fractions,
+                          ref["capacity_fractions"])
+    assert comp.energy_j == ref["energy_j"]
+    assert comp.energy_vs_sram == ref["energy_vs_sram"]
+    assert comp.monolithic_energy_j == ref["monolithic_energy_j"]
+    assert comp.area_um2 == ref["area_um2"]
+    assert comp.area_vs_sram == ref["area_vs_sram"]
+    assert comp.policy == "refresh-free"
+    assert comp.quantization is None
+
+
+# ---------------------------------------------------------------------------
+# synthetic fixtures
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _Raw:
+    """compose(raw=...) duck type: per-lifetime address/cycle arrays."""
+    lifetime_cycles: np.ndarray
+    addr: np.ndarray
+    valid: np.ndarray
+
+
+def _synthetic(n=5000, seed=0, clock_hz=1.0e9, n_addr=512):
+    """SubpartitionStats + raw with a lognormal lifetime spread crossing
+    both gain-cell retentions (some sub-us, some 1-10us, a long tail)."""
+    rng = np.random.RandomState(seed)
+    lt_cycles = rng.lognormal(mean=6.5, sigma=2.0, size=n).astype(np.int64)
+    addr = rng.randint(0, n_addr, n).astype(np.int64)
+    reads = rng.poisson(3.0, n).astype(np.float64)
+    dur = float(lt_cycles.max()) / clock_hz
+    block_bits = 256
+    stats = SubpartitionStats(
+        name="syn", n_reads=int(reads.sum()), n_writes=n,
+        n_unique_addrs=len(np.unique(addr)), duration_s=dur,
+        write_freq_hz=n / dur, read_freq_hz=float(reads.sum()) / dur,
+        lifetimes_s=lt_cycles / clock_hz,
+        lifetime_bits=np.full(n, block_bits, np.float64),
+        accesses_per_lifetime=reads + 1.0,
+        orphan_fraction=0.0, block_bits=block_bits)
+    return stats, _Raw(lifetime_cycles=lt_cycles, addr=addr,
+                       valid=np.ones(n, bool))
+
+
+@pytest.fixture(scope="module")
+def analyzed_session():
+    s = ProfileSession("systolic")
+    s.profile([GemmLayer("a", 48, 64, 64), GemmLayer("b", 32, 48, 96)],
+              rows=32, cols=32, dataflow="ws").analyze()
+    return s
+
+
+# ---------------------------------------------------------------------------
+# refresh-free: bit-for-bit vs the frozen seed implementation
+# ---------------------------------------------------------------------------
+
+def test_refresh_free_matches_seed_on_profiled_stats(analyzed_session):
+    s = analyzed_session
+    for name, (st, raw) in s._stats.items():
+        for r in (raw, None):
+            got = compose(st, raw=r, devices=DEFAULT_DEVICES,
+                          clock_hz=s._clock_hz)
+            _assert_matches_seed(
+                got, _seed_compose(st, raw=r, clock_hz=s._clock_hz))
+
+
+def test_refresh_free_matches_seed_on_synthetic_and_grid():
+    stats, raw = _synthetic()
+    cands = DeviceGrid(mixes=(0.0, 0.5, 1.0),
+                       retention_scales=(0.5, 1.0, 2.0),
+                       per_mix=True).candidates()
+    comps = evaluate([c.devices for c in cands], stats, raw=raw)
+    assert len(comps) == len(cands)
+    for cand, comp in zip(cands, comps):
+        _assert_matches_seed(
+            comp, _seed_compose(stats, raw=raw, devices=cand.devices))
+
+
+def test_refresh_free_matches_seed_on_empty_trace():
+    tr = make_trace([0, 5], [1, 1], [True, True], hit=[False, False])
+    st = compute_stats(tr, 0, mode="cache", write_allocate=False)
+    raw = lifetimes_of_trace(tr.select(0), mode="cache",
+                             write_allocate=False)
+    assert len(st.lifetimes_s) == 0
+    got = compose(st, raw=raw, clock_hz=tr.clock_hz)
+    _assert_matches_seed(got, _seed_compose(st, raw=raw,
+                                            clock_hz=tr.clock_hz))
+
+
+# ---------------------------------------------------------------------------
+# satellite: deterministic device ordering under energy ties
+# ---------------------------------------------------------------------------
+
+def test_equal_energy_devices_order_deterministically():
+    # two gain cells with identical access energy but different names:
+    # the seed's pure-energy key kept input order; the (energy, name)
+    # key must order them identically whichever way they come in
+    a = DeviceModel(name="GC-A", area_um2_per_bit=0.01,
+                    read_fj_per_bit=5.0, write_fj_per_bit=6.0,
+                    retention_s=1e-6)
+    b = DeviceModel(name="GC-B", area_um2_per_bit=0.02,
+                    read_fj_per_bit=5.0, write_fj_per_bit=6.0,
+                    retention_s=1e-5)
+    stats, raw = _synthetic(n=2000, seed=3)
+    fwd = compose(stats, raw=raw, devices=(SRAM, a, b))
+    rev = compose(stats, raw=raw, devices=(SRAM, b, a))
+    assert fwd.devices == rev.devices == ("GC-A", "GC-B", "SRAM")
+    assert np.array_equal(fwd.capacity_fractions, rev.capacity_fractions)
+    assert fwd.energy_j == rev.energy_j
+    assert fwd.area_um2 == rev.area_um2
+
+
+# ---------------------------------------------------------------------------
+# refresh-aware
+# ---------------------------------------------------------------------------
+
+def test_refresh_aware_hand_computed_single_lifetime():
+    # one 2.5us lifetime, 2 reads, 8 bits; devices SRAM + Si-GCRAM(1us).
+    # refresh-free: Si does not cover it -> SRAM: (18 + 2*15) * 8 fJ.
+    # refresh-aware: Si with floor(2.5/1)=2 refreshes:
+    #   (w + 2r + 2*(r+w)) * 8 fJ, cheaper than SRAM.
+    bits = 8.0
+    stats = SubpartitionStats(
+        name="one", n_reads=2, n_writes=1, n_unique_addrs=1,
+        duration_s=1.0, write_freq_hz=1.0, read_freq_hz=2.0,
+        lifetimes_s=np.array([2.5e-6]),
+        lifetime_bits=np.array([bits]),
+        accesses_per_lifetime=np.array([3.0]),
+        orphan_fraction=0.0, block_bits=8)
+    devices = (SRAM, SI_GCRAM)
+    rf = compose(stats, devices=devices)
+    ra = compose(stats, devices=devices, policy="refresh-aware")
+    e_sram = (SRAM.write_fj_per_bit + 2 * SRAM.read_fj_per_bit) * bits
+    e_si = (SI_GCRAM.write_fj_per_bit + 2 * SI_GCRAM.read_fj_per_bit
+            + 2 * SI_GCRAM.refresh_energy_fj_per_bit()) * bits
+    assert rf.energy_j == pytest.approx(e_sram * 1e-15)
+    assert ra.energy_j == pytest.approx(e_si * 1e-15)
+    assert ra.energy_j < rf.energy_j
+    # capacity follows the per-address (here: per-lifetime) argmin
+    assert ra.capacity_fractions[list(ra.devices).index("Si-GCRAM")] == 1.0
+
+
+def test_refresh_aware_beats_refresh_free_on_mid_retention_trace():
+    # address 0 lives 1500 cycles (1.5us at 1 GHz) — longer than Si's
+    # 1us retention, shorter than Hybrid's 10us: refresh-free pays
+    # Hybrid access energy, refresh-aware hosts it on Si with 1 refresh
+    tr = make_trace([0, 700, 1500, 1600, 1650],
+                    [0, 0, 0, 0, 1],
+                    [True, False, False, True, True])
+    st = compute_stats(tr, 0)
+    raw = lifetimes_of_trace(tr.select(0))
+    rf = compose(st, raw=raw, clock_hz=tr.clock_hz)
+    ra = compose(st, raw=raw, clock_hz=tr.clock_hz,
+                 policy="refresh-aware")
+    assert ra.energy_j < rf.energy_j
+    assert ra.policy == "refresh-aware"
+
+
+@pytest.mark.parametrize("use_raw", [True, False])
+def test_refresh_aware_never_worse_than_refresh_free(analyzed_session,
+                                                     use_raw):
+    stats, raw = _synthetic()
+    r = raw if use_raw else None
+    rf = compose(stats, raw=r)
+    ra = compose(stats, raw=r, policy="refresh-aware")
+    assert ra.energy_j <= rf.energy_j * (1 + 1e-12)
+    s = analyzed_session
+    for name, (st, rw) in s._stats.items():
+        rf = compose(st, raw=rw if use_raw else None,
+                     clock_hz=s._clock_hz)
+        ra = compose(st, raw=rw if use_raw else None,
+                     clock_hz=s._clock_hz, policy="refresh-aware")
+        assert ra.energy_j <= rf.energy_j * (1 + 1e-12)
+
+
+def test_refresh_aware_zero_refreshes_at_exact_retention_boundary():
+    # a lifetime exactly equal to a device's retention is covered by
+    # the refresh-free fit test (lt <= ret), so refresh-aware must
+    # bill ceil(T/t_ret)-1 = 0 refreshes there — not floor(T/t_ret)=1,
+    # which would make it pay for a refresh the datum never needs and
+    # break the never-worse invariant at the boundary
+    stats = SubpartitionStats(
+        name="edge", n_reads=2, n_writes=1, n_unique_addrs=1,
+        duration_s=1.0, write_freq_hz=1.0, read_freq_hz=2.0,
+        lifetimes_s=np.array([SI_GCRAM.retention_s]),   # exactly 1us
+        lifetime_bits=np.array([8.0]),
+        accesses_per_lifetime=np.array([3.0]),
+        orphan_fraction=0.0, block_bits=8)
+    rf = compose(stats)
+    ra = compose(stats, policy="refresh-aware")
+    assert ra.energy_j == rf.energy_j
+    assert np.array_equal(ra.capacity_fractions, rf.capacity_fractions)
+
+
+def test_refresh_aware_equals_refresh_free_when_everything_fits():
+    # all lifetimes under Si retention: zero refreshes anywhere, both
+    # policies make the same (cheapest-device) choice
+    stats, raw = _synthetic(n=500, seed=1)
+    short = dataclasses.replace(
+        stats, lifetimes_s=np.full(500, 0.5e-6))
+    rf = compose(short, raw=None)
+    ra = compose(short, raw=None, policy="refresh-aware")
+    assert ra.energy_j == rf.energy_j
+    assert np.array_equal(ra.capacity_fractions, rf.capacity_fractions)
+
+
+# ---------------------------------------------------------------------------
+# bank-quantized
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("base", ["refresh-free", "refresh-aware"])
+def test_bank_quantized_snaps_up_with_slack(base):
+    stats, raw = _synthetic()
+    plain = compose(stats, raw=raw, policy=base)
+    for n_banks in (4, 16, 64):
+        bq = compose(stats, raw=raw,
+                     policy=f"bank-quantized:{base}@{n_banks}")
+        q = bq.capacity_fractions
+        u = np.asarray(bq.quantization["unquantized_fractions"])
+        assert np.array_equal(u, plain.capacity_fractions)
+        # snapped up, on the bank lattice, slack >= 0
+        assert (q >= u).all()
+        assert np.array_equal(q * n_banks, np.round(q * n_banks))
+        assert q.sum() >= u.sum()
+        assert bq.quantization["slack"] >= 0.0
+        assert bq.quantization["slack"] == pytest.approx(
+            float(q.sum() - u.sum()))
+        assert bq.quantization["n_banks"] == n_banks
+        assert bq.quantization["banks"] == [int(v) for v in
+                                            q * n_banks]
+        # energy is the base policy's; area bills the slack
+        assert bq.energy_j == plain.energy_j
+        assert bq.area_vs_sram >= plain.area_vs_sram
+
+
+def test_bank_quantized_validation():
+    with pytest.raises(ValueError, match="power of two"):
+        get_policy("bank-quantized@12")
+    with pytest.raises(ValueError, match="power of two"):
+        BankQuantizedPolicy(n_banks=0)
+    with pytest.raises(ValueError, match="wrap"):
+        BankQuantizedPolicy(BankQuantizedPolicy())
+
+
+# ---------------------------------------------------------------------------
+# policy spec grammar
+# ---------------------------------------------------------------------------
+
+def test_get_policy_grammar():
+    assert isinstance(get_policy("refresh-free"), RefreshFreePolicy)
+    assert isinstance(get_policy(None), RefreshFreePolicy)
+    assert isinstance(get_policy("refresh-aware"), RefreshAwarePolicy)
+    bq = get_policy("bank-quantized")
+    assert isinstance(bq, BankQuantizedPolicy)
+    assert isinstance(bq.base, RefreshFreePolicy)
+    assert bq.n_banks == 16
+    bq = get_policy("bank-quantized:refresh-aware@32")
+    assert isinstance(bq.base, RefreshAwarePolicy)
+    assert bq.n_banks == 32
+    assert bq.name == "bank-quantized:refresh-aware@32"
+    # instances pass through
+    assert get_policy(bq) is bq
+    assert set(available_policies()) == {"refresh-free", "refresh-aware",
+                                         "bank-quantized"}
+
+
+def test_get_policy_rejects_bad_specs():
+    with pytest.raises(ValueError, match="unknown policy"):
+        get_policy("refresh-sometimes")
+    with pytest.raises(ValueError, match="only bank-quantized"):
+        get_policy("refresh-free@4")
+    with pytest.raises(ValueError, match="only bank-quantized"):
+        get_policy("refresh-aware:refresh-free")
+    with pytest.raises(ValueError, match="integer"):
+        get_policy("bank-quantized@lots")
+
+
+def test_engine_validates_device_sets():
+    stats, raw = _synthetic(n=100)
+    with pytest.raises(ValueError, match="non-empty"):
+        compose(stats, devices=())
+    with pytest.raises(ValueError, match="SRAM"):
+        compose(stats, devices=(SI_GCRAM, HYBRID_GCRAM))
+
+
+# ---------------------------------------------------------------------------
+# session + CLI integration
+# ---------------------------------------------------------------------------
+
+def test_session_compose_policy_lands_in_report(analyzed_session):
+    s = ProfileSession("systolic")
+    s.profile([GemmLayer("g", 32, 48, 48)], rows=16, cols=16)
+    s.analyze().compose(policy="bank-quantized:refresh-aware@8")
+    report = s.report()
+    for name, entry in report["subpartitions"].items():
+        comp = entry["composition"]
+        assert comp["policy"] == "bank-quantized:refresh-aware@8"
+        assert comp["quantization"]["n_banks"] == 8
+        assert comp["quantization"]["slack"] >= 0.0
+        assert s.composition(name).policy == \
+            "bank-quantized:refresh-aware@8"
+    json.dumps(report)
+
+
+def test_session_run_policy_kwarg_routes_to_compose():
+    layers = [GemmLayer("g", 32, 32, 32)]
+    got = ProfileSession("systolic").run(layers, rows=16, cols=16,
+                                         policy="refresh-aware")
+    staged = ProfileSession("systolic")
+    staged.profile(layers, rows=16, cols=16)
+    staged.analyze().compose(policy="refresh-aware")
+    want = staged.report()
+    assert json.dumps(got, sort_keys=True) == json.dumps(
+        want, sort_keys=True)
+    for entry in got["subpartitions"].values():
+        assert entry["composition"]["policy"] == "refresh-aware"
+
+
+def test_session_sweep_policy_tags_points(analyzed_session):
+    res = analyzed_session.sweep(DeviceGrid(), policy="refresh-aware",
+                                 attach=False)
+    assert all(p.policy == "refresh-aware" for p in res.points)
+    assert all(p.asdict()["policy"] == "refresh-aware"
+               for p in res.points)
+    import csv
+    rows = res.csv_rows()
+    assert rows[0].split(",")[3] == "policy"
+    assert all(r[3] == "refresh-aware" for r in csv.reader(rows[1:]))
+
+
+def test_composition_csv_rows_format():
+    stats, raw = _synthetic(n=300, seed=7)
+    comps = {"L1": compose(stats, raw=raw),
+             "L2": compose(stats, raw=raw, policy="refresh-aware")}
+    rows = composition_csv_rows(comps)
+    assert rows[0] == ("subpartition,policy,area_vs_sram,"
+                       "energy_vs_sram,capacity_fractions")
+    assert len(rows) == 3
+    assert rows[1].startswith("L1,refresh-free,")
+    assert rows[2].startswith("L2,refresh-aware,")
+
+
+def test_cli_profile_csv_and_policy(tmp_path):
+    from repro.launch.profile import main as profile_main
+    csv_path = tmp_path / "comp.csv"
+    profile_main(["--backend", "systolic", "--dry-run",
+                  "--policy", "refresh-aware", "--csv", str(csv_path)])
+    lines = csv_path.read_text().splitlines()
+    assert lines[0].startswith("subpartition,policy,")
+    assert len(lines) == 4           # header + ifmap/filter/ofmap
+    assert all(line.split(",")[1] == "refresh-aware"
+               for line in lines[1:])
+
+
+def test_campaign_policy_is_cache_key_component(tmp_path):
+    from repro.launch.campaign import CampaignRunner
+
+    def keys(policy):
+        r = CampaignRunner("polybench-2mm", ("systolic",),
+                           cache_dir=str(tmp_path), policy=policy)
+        return {j.label: j.key for j in r.plan()}
+
+    base = keys("refresh-free")
+    aware = keys("refresh-aware")
+    quant = keys("bank-quantized")
+    assert set(base) == set(aware) == set(quant)
+    for label in base:
+        assert len({base[label], aware[label], quant[label]}) == 3
+    # spec strings canonicalize before hashing: aliases share a key
+    assert keys("bank-quantized:refresh-free@16") == quant

@@ -73,6 +73,61 @@ def test_composer_never_worse_than_best_monolithic(seed):
     assert comp.monolithic_energy_j["SRAM"] > 0
 
 
+@pytest.mark.slow
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_refresh_aware_never_worse_than_refresh_free(data):
+    """refresh-aware can always fall back to the refresh-free choice
+    (zero refreshes on a covering device), so its billed energy is <=
+    refresh-free on any trace — with or without per-address raw."""
+    seed = data.draw(st.integers(0, 2 ** 16))
+    n = data.draw(st.integers(10, 200))
+    spread = data.draw(st.integers(3, 7))   # lifetime scale: ns .. 100us
+    rng = np.random.RandomState(seed)
+    t = np.sort(rng.randint(0, 10 ** spread, n))
+    a = rng.randint(0, 12, n)
+    w = rng.rand(n) < 0.35
+    tr = make_trace(t, a, w)
+    stats = compute_stats(tr, 0)
+    raw = lifetimes_of_trace(tr)
+    for r in (raw, None):
+        rf = compose(stats, raw=r, clock_hz=tr.clock_hz)
+        ra = compose(stats, raw=r, clock_hz=tr.clock_hz,
+                     policy="refresh-aware")
+        assert ra.energy_j <= rf.energy_j * (1 + 1e-12)
+        # and still never worse than monolithic SRAM
+        assert ra.energy_vs_sram <= 1.0 + 1e-9
+
+
+@pytest.mark.slow
+@settings(max_examples=30, deadline=None)
+@given(st.data())
+def test_bank_quantized_capacity_dominates_unquantized(data):
+    """Bank-quantized fractions are snapped *up*: per device >= the
+    unquantized fraction, totals >= the unquantized total (which sums
+    to 1), slack >= 0, and everything sits on the 1/n_banks lattice."""
+    seed = data.draw(st.integers(0, 2 ** 16))
+    n = data.draw(st.integers(10, 200))
+    n_banks = data.draw(st.sampled_from([1, 2, 8, 32, 128]))
+    base = data.draw(st.sampled_from(["refresh-free", "refresh-aware"]))
+    rng = np.random.RandomState(seed)
+    t = np.sort(rng.randint(0, 10 ** 6, n))
+    a = rng.randint(0, 12, n)
+    w = rng.rand(n) < 0.35
+    tr = make_trace(t, a, w)
+    stats = compute_stats(tr, 0)
+    raw = lifetimes_of_trace(tr)
+    comp = compose(stats, raw=raw, clock_hz=tr.clock_hz,
+                   policy=f"bank-quantized:{base}@{n_banks}")
+    q = comp.capacity_fractions
+    u = np.asarray(comp.quantization["unquantized_fractions"])
+    assert (q >= u).all()
+    assert q.sum() >= u.sum()
+    assert u.sum() == pytest.approx(1.0)
+    assert comp.quantization["slack"] >= 0.0
+    assert np.array_equal(q * n_banks, np.round(q * n_banks))
+
+
 @settings(max_examples=25, deadline=None)
 @given(st.floats(1e3, 1e12))
 def test_retention_monotone_in_write_freq(fw):

@@ -2,10 +2,14 @@
 
 The locked contracts:
   - a degenerate 1-point grid reproduces ``compose()`` on
-    ``DEFAULT_DEVICES`` bit-for-bit (batched and naive paths);
-  - batched == naive on arbitrary grids;
+    ``DEFAULT_DEVICES`` bit-for-bit;
+  - the grid-batched engine call == a per-candidate ``compose()`` loop
+    on arbitrary grids (shared-engine chunking equivalence);
   - Pareto output is deterministic, dominated-point-free, and carries
     the all-SRAM anchor with ``area_vs_sram == 1.0`` exactly.
+
+(The policy engine itself — refresh-aware, bank-quantized, the frozen
+pre-refactor reference — is covered by ``tests/test_compose_policies.py``.)
 """
 
 import json
@@ -39,6 +43,8 @@ def _assert_compositions_identical(got, ref):
     assert got.monolithic_energy_j == ref.monolithic_energy_j
     assert got.area_um2 == ref.area_um2
     assert got.area_vs_sram == ref.area_vs_sram
+    assert got.policy == ref.policy
+    assert got.quantization == ref.quantization
 
 
 # ---------------------------------------------------------------------------
@@ -112,11 +118,10 @@ def test_grid_size_and_anchor():
 # degenerate sweep == compose() bit-for-bit
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("vectorized", [True, False])
-def test_degenerate_sweep_reproduces_compose(analyzed_session, vectorized):
+def test_degenerate_sweep_reproduces_compose(analyzed_session):
     s = analyzed_session
     grid = DeviceGrid.default_point()
-    runner = SweepRunner(grid, vectorized=vectorized)
+    runner = SweepRunner(grid)
     for name, (st, raw) in s._stats.items():
         ref = compose(st, raw=raw, devices=DEFAULT_DEVICES,
                       clock_hz=s._clock_hz)
@@ -124,7 +129,13 @@ def test_degenerate_sweep_reproduces_compose(analyzed_session, vectorized):
         _assert_compositions_identical(pt.composition, ref)
 
 
-def test_batched_equals_naive_on_wide_grid(analyzed_session):
+@pytest.mark.parametrize("policy", ["refresh-free", "refresh-aware",
+                                    "bank-quantized:refresh-aware@8"])
+def test_batched_equals_compose_loop_on_wide_grid(analyzed_session,
+                                                  policy):
+    # the grid-batched engine call must equal a per-candidate compose()
+    # loop (which exercises the single-candidate engine path) for every
+    # policy — the chunking/batching must be value-transparent
     s = analyzed_session
     grid = DeviceGrid(mixes=(0.0, 0.25, 0.5, 1.0),
                       retention_scales=(0.25, 1.0, 4.0),
@@ -132,13 +143,15 @@ def test_batched_equals_naive_on_wide_grid(analyzed_session):
                       energy_scales=(0.8, 1.0),
                       per_mix=True)
     for name, (st, raw) in s._stats.items():
-        vec = SweepRunner(grid).run_stats(st, raw, clock_hz=s._clock_hz)
-        naive = SweepRunner(grid, vectorized=False).run_stats(
+        vec = SweepRunner(grid, policy=policy).run_stats(
             st, raw, clock_hz=s._clock_hz)
-        assert len(vec) == len(naive) == len(grid)
-        for pv, pn in zip(vec, naive):
-            assert pv.candidate == pn.candidate
-            _assert_compositions_identical(pv.composition, pn.composition)
+        loop = [compose(st, raw=raw, devices=c.devices,
+                        clock_hz=s._clock_hz, policy=policy)
+                for c in grid.candidates()]
+        assert len(vec) == len(loop) == len(grid)
+        for pv, ref in zip(vec, loop):
+            assert pv.policy == ref.policy
+            _assert_compositions_identical(pv.composition, ref)
 
 
 def test_sweep_without_raw_matches_compose(analyzed_session):
@@ -265,13 +278,14 @@ def test_sweep_result_exports(analyzed_session):
     assert blob["n_points"] == len(res)
     assert set(blob["frontiers"]) == {"ifmap", "filter", "ofmap"}
     rows = res.csv_rows()
-    assert rows[0].startswith("geometry,subpartition,candidate,")
+    assert rows[0].startswith("geometry,subpartition,candidate,policy,")
     assert len(rows) == len(res) + 1
     # every frontier candidate is flagged on_frontier=1 in the CSV
     import csv
     parsed = list(csv.reader(rows[1:]))
-    assert all(len(r) == 7 for r in parsed)  # comma-safe quoting
-    flagged = {(r[1], r[2]) for r in parsed if r[5] == "1"}
+    assert all(len(r) == 8 for r in parsed)  # comma-safe quoting
+    assert all(r[3] == "refresh-free" for r in parsed)  # policy column
+    flagged = {(r[1], r[2]) for r in parsed if r[6] == "1"}
     expect = {(sub, p.candidate)
               for (geom, sub), fr in res.frontiers().items()
               for p in fr.points}
