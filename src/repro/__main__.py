@@ -18,8 +18,14 @@ Subcommands:
              pipeline with a worker pool and an on-disk trace cache, and
              emit the cross-suite aggregate report (access-weighted
              short-lived fractions per backend per retention bin +
-             suite-level Pareto frontiers; ``--dry-run`` prints the job
-             plan without touching a backend)
+             suite-level Pareto frontiers; ``--scheduler process`` runs
+             lease-based worker processes over a shared artifact store,
+             ``--status DIR`` prints a campaign ledger's state, and
+             ``--dry-run`` prints the job plan without touching a
+             backend)
+  worker     join an in-flight process-scheduled campaign: lease jobs
+             from a shared artifact store (``--store DIR``), heartbeat,
+             execute, and write artifacts until the queue drains
   workloads  list the registered workload specs (name, suite, backends)
   backends   list the registered profiling backends
 
@@ -33,6 +39,10 @@ Examples::
       --retention-scales 0.5,1,2,4 --csv sweep.csv
   PYTHONPATH=src python -m repro campaign --workloads \
       tinyllama_1_1b,polybench-2mm --backends systolic,gpu --jobs 2
+  PYTHONPATH=src python -m repro campaign --workloads suite:mlperf \
+      --backends systolic,gpu --scheduler process --jobs 8
+  PYTHONPATH=src python -m repro campaign --status .gainsight-cache
+  PYTHONPATH=src python -m repro worker --store .gainsight-cache
   PYTHONPATH=src python -m repro campaign --dry-run
   PYTHONPATH=src python -m repro workloads
   PYTHONPATH=src python -m repro backends
@@ -62,6 +72,10 @@ def main(argv=None) -> int:
     if cmd == "campaign":
         from repro.launch.campaign import main as campaign_main
         campaign_main(rest)
+        return 0
+    if cmd == "worker":
+        from repro.cluster.worker import main as worker_main
+        worker_main(rest)
         return 0
     if cmd == "workloads":
         from repro.workloads import available_workloads, get_workload

@@ -1,0 +1,35 @@
+"""Distributed campaign scheduler: queue, leases, shared artifacts.
+
+The campaign problem is embarrassingly parallel (N workloads x M
+backends, no cross-job data flow) but the PR-4 thread pool serialized
+it behind the GIL and had no failure story.  This package supplies the
+ray-style pieces the ROADMAP asks for, scaled to one shared directory:
+
+  ArtifactStore  - the on-disk trace cache promoted to a multi-writer
+                   artifact store (write-if-absent puts, O_EXCL write
+                   locks, stale-lock breaking)
+  JobLedger      - durable JSONL job queue with atomic lock-protected
+                   transitions, time-bounded worker leases whose
+                   heartbeat is the lease record's mtime, exponential
+                   backoff requeue and poison-job quarantine
+                   (RetryPolicy from repro.runtime.fault_tolerance)
+  run_worker     - the worker-process loop (`python -m repro worker`)
+
+The supervisor half (lease reclaim, worker respawn, per-job metrics)
+lives in :class:`repro.runtime.fault_tolerance.CampaignSupervisor`;
+``repro.launch.campaign`` wires it all behind
+``CampaignRunner(scheduler="process")``.
+
+Import contract: stdlib-only at import time (workers lazy-import the
+backend stack only when a job actually executes), so campaign planning,
+``--dry-run`` and ``--status`` stay fast and jax-free.
+"""
+
+from repro.cluster.ledger import (DEFAULT_LEASE_TTL_S, JobLedger,
+                                  JobRecord, default_worker_id)
+from repro.cluster.store import ArtifactStore
+from repro.cluster.worker import run_worker, runner_from_manifest
+
+__all__ = ["ArtifactStore", "JobLedger", "JobRecord",
+           "DEFAULT_LEASE_TTL_S", "default_worker_id", "run_worker",
+           "runner_from_manifest"]

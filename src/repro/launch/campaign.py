@@ -16,16 +16,33 @@ Because every job is cached by content hash, re-runs are incremental
 and interrupted campaigns resume: only jobs whose artifact is missing
 (or whose key changed) hit a backend again.
 
+Two schedulers share the same plan, cache keys, and artifacts:
+
+* ``scheduler="thread"`` (default) — the in-process pool; right for
+  small campaigns, tests, and anything cheap enough that process spawn
+  would dominate.  Kept bit-for-bit: per-job artifacts and aggregates
+  are unchanged from the PR-4 runner.
+* ``scheduler="process"`` — the distributed path (``repro.cluster``):
+  jobs go into a durable lease-based ledger inside the artifact store,
+  worker *processes* (`python -m repro worker`) drain it with
+  heartbeats, and a :class:`CampaignSupervisor` reclaims dead leases,
+  requeues with backoff, quarantines poison jobs, and respawns dead
+  workers.  One wedged or killed worker costs only its in-flight jobs;
+  a killed *campaign* resumes from the ledger.
+
   PYTHONPATH=src python -m repro campaign \
       --workloads tinyllama_1_1b,polybench-2mm --backends systolic,gpu \
       --jobs 2
-  PYTHONPATH=src python -m repro campaign --workloads suite:polybench \
-      --backends gpu --cache-dir /tmp/gainsight-cache --out campaign.json
+  PYTHONPATH=src python -m repro campaign --workloads suite:mlperf \
+      --backends systolic,gpu --scheduler process --jobs 8 \
+      --cache-dir /tmp/gainsight-cache --out campaign.json
+  PYTHONPATH=src python -m repro campaign --status /tmp/gainsight-cache
   PYTHONPATH=src python -m repro campaign --dry-run      # plan only, CI
 
-Import contract: planning (``--dry-run``, cache-key computation) uses
-only ``repro.workloads`` + ``repro.compose.policies`` (numpy + stdlib,
-for policy-spec validation) + stdlib; backends/JAX load only when jobs
+Import contract: planning (``--dry-run``, ``--status``, cache-key
+computation) uses only ``repro.workloads`` + ``repro.compose.policies``
+(numpy + stdlib, for policy-spec validation) + ``repro.cluster`` /
+``repro.runtime`` (stdlib) + stdlib; backends/JAX load only when jobs
 actually execute.
 """
 
@@ -38,11 +55,15 @@ import json
 import math
 import os
 import tempfile
+import time
+import traceback
 from typing import Mapping, Sequence
 
 from repro.launch import parse_floats as _floats
 from repro.workloads import (canonical_backend, get_workload,
                              resolve_workloads)
+
+SCHEDULERS = ("thread", "process")
 
 SCHEMA_VERSION = 2    # v2: assignment policy in the cache key + artifact
 
@@ -95,9 +116,14 @@ class _AggPoint:
 class CampaignResult:
     """Executed campaign: per-job artifacts + the aggregate report."""
     jobs: list              # CampaignJob, plan order
-    artifacts: list         # per-job artifact dicts (cache schema)
+    artifacts: list         # per-job artifact dicts (None where failed)
     cached: list            # per-job bool: served from the trace cache
     aggregate: dict         # the cross-suite aggregate report
+    errors: list = dataclasses.field(default_factory=list)
+                            # per-job error string or None, plan order
+    metrics: dict | None = None   # CampaignSupervisor.metrics() (process)
+    scheduler: str = "thread"
+    store_dir: str | None = None  # the shared artifact store (process)
 
     @property
     def executed(self) -> int:
@@ -106,6 +132,10 @@ class CampaignResult:
     @property
     def cache_hits(self) -> int:
         return sum(1 for c in self.cached if c)
+
+    @property
+    def failed(self) -> int:
+        return sum(1 for e in self.errors if e)
 
     def to_json(self) -> dict:
         return self.aggregate
@@ -151,7 +181,19 @@ class CampaignRunner:
         sweep (``repro.compose.get_policy`` grammar); the canonical
         policy name is a cache-key component, so changing policy never
         reuses another policy's artifacts.
+    scheduler : ``"thread"`` (in-process pool, the PR-4 path kept
+        bit-for-bit) or ``"process"`` (lease-based worker processes
+        over a shared artifact store — see ``repro.cluster``).
+    lease_ttl_s : process scheduler only — seconds without a heartbeat
+        before a worker's lease is reclaimed and its job requeued.
+    max_retries : process scheduler only — requeues (failures *or*
+        lease expiries) before a job is quarantined as poison.
     """
+
+    #: how long a thread-pool job waits on a contended per-key write
+    #: lock (another invocation computing the same key) before giving
+    #: up and computing it anyway; put() stays clobber-safe either way.
+    write_lock_wait_s = 600.0
 
     def __init__(self, workloads, backends: Sequence[str], *,
                  jobs: int = 1, cache_dir: str | None = None,
@@ -161,7 +203,10 @@ class CampaignRunner:
                  retention_bins: Sequence[float] = DEFAULT_RETENTION_BINS,
                  sweep_axes: Mapping | None = DEFAULT_SWEEP_AXES,
                  devices: Sequence[str] | None = None,
-                 policy: str = "refresh-free"):
+                 policy: str = "refresh-free",
+                 scheduler: str = "thread",
+                 lease_ttl_s: float = 30.0,
+                 max_retries: int = 3):
         from repro.compose.policies import get_policy
         self.workloads = resolve_workloads(workloads)
         self.policy = get_policy(policy).name    # canonical, validated
@@ -180,6 +225,12 @@ class CampaignRunner:
             raise ValueError("retention_bins must be non-empty")
         self.sweep_axes = dict(sweep_axes) if sweep_axes else None
         self.devices = tuple(devices) if devices is not None else None
+        if scheduler not in SCHEDULERS:
+            raise ValueError(f"scheduler must be one of {SCHEDULERS}, "
+                             f"got {scheduler!r}")
+        self.scheduler = scheduler
+        self.lease_ttl_s = float(lease_ttl_s)
+        self.max_retries = int(max_retries)
         self.skipped: list = []      # (workload, backend) without lowering
 
     # ------------------------------------------------------------------
@@ -279,49 +330,221 @@ class CampaignRunner:
                 "short_lived": short_lived,
                 "sweep_points": sweep_points}
 
+    def job_for_key(self, key: str) -> CampaignJob:
+        """The planned job with this cache key (workers rebuild jobs
+        from ledger records this way)."""
+        for job in self.plan():
+            if job.key == key:
+                return job
+        raise KeyError(f"no planned job has cache key {key[:12]}..; "
+                       "the store manifest and ledger disagree")
+
     def _run_job(self, job: CampaignJob) -> tuple:
-        """(artifact, cached) for one job, via the trace cache."""
-        path = self._cache_path(job)
-        if path and os.path.exists(path):
-            with open(path) as f:
-                return json.load(f), True
-        artifact = self._execute(job)
-        if path:
-            os.makedirs(self.cache_dir, exist_ok=True)
-            fd, tmp = tempfile.mkstemp(dir=self.cache_dir,
-                                       suffix=".tmp")
+        """(artifact | None, cached, error | None) for one job.
+
+        A job that raises is *recorded*, not propagated: one bad
+        workload must never abort the other N-1 cells of a campaign.
+        Writes go through the shared :class:`ArtifactStore`, so two
+        invocations racing on one cache directory neither clobber nor
+        double-bill: the loser of the write lock waits for the winner's
+        artifact, and ``put`` is write-if-absent regardless.
+        """
+        if not self.cache_dir:
             try:
-                with os.fdopen(fd, "w") as f:
-                    json.dump(artifact, f, default=repr)
-                os.replace(tmp, path)   # atomic: readers never see partials
-            except BaseException:
-                if os.path.exists(tmp):
-                    os.unlink(tmp)
-                raise
-        return artifact, False
+                return self._execute(job), False, None
+            except Exception:            # noqa: BLE001 - recorded per-job
+                return None, False, traceback.format_exc(limit=20)
+        from repro.cluster import ArtifactStore
+        store = ArtifactStore(self.cache_dir)
+        artifact = store.load(job.key)
+        if artifact is not None:
+            return artifact, True, None
+        owner = f"campaign-{os.getpid()}"
+        got_lock = store.acquire_write_lock(job.key, owner)
+        if not got_lock:                 # another invocation is computing
+            artifact = store.wait_for(job.key,
+                                      timeout_s=self.write_lock_wait_s)
+            if artifact is not None:
+                return artifact, True, None
+        try:
+            artifact = self._execute(job)
+            if not store.put(job.key, artifact):
+                artifact = store.load(job.key)   # racer won: canonical copy
+            return artifact, False, None
+        except Exception:                # noqa: BLE001 - recorded per-job
+            return None, False, traceback.format_exc(limit=20)
+        finally:
+            if got_lock:
+                store.release_write_lock(job.key)
 
     def run(self) -> CampaignResult:
         jobs = self.plan()
+        if self.scheduler == "process":
+            return self._run_process(jobs)
         if self.jobs == 1 or len(jobs) <= 1:
             results = [self._run_job(j) for j in jobs]
         else:
             from concurrent.futures import ThreadPoolExecutor
             with ThreadPoolExecutor(max_workers=self.jobs) as pool:
                 results = list(pool.map(self._run_job, jobs))
-        artifacts = [a for a, _ in results]
-        cached = [c for _, c in results]
-        aggregate = self._aggregate(jobs, artifacts, cached)
+        artifacts = [a for a, _, _ in results]
+        cached = [c for _, c, _ in results]
+        errors = [e for _, _, e in results]
+        aggregate = self._aggregate(jobs, artifacts, cached,
+                                    errors=errors)
         return CampaignResult(jobs=jobs, artifacts=artifacts,
-                              cached=cached, aggregate=aggregate)
+                              cached=cached, aggregate=aggregate,
+                              errors=errors, scheduler="thread",
+                              store_dir=self.cache_dir)
+
+    # ------------------------------------------------------------------
+    # the process scheduler (repro.cluster)
+    # ------------------------------------------------------------------
+    def manifest(self) -> dict:
+        """The JSON round-trippable runner config workers rebuild from
+        (``campaign.json`` in the store)."""
+        if self.devices is not None and \
+                not all(isinstance(d, str) for d in self.devices):
+            raise ValueError(
+                "scheduler='process' needs device *names* (workers "
+                "re-resolve them); got DeviceModel objects")
+        return {"schema": SCHEMA_VERSION,
+                "workloads": list(self.workloads),
+                "backends": list(self.backends),
+                "seq": self.seq,
+                "params": self.params,
+                "backend_cfg": self.backend_cfg,
+                "retention_bins": list(self.retention_bins),
+                "sweep_axes": self.sweep_axes,
+                "devices": list(self.devices) if self.devices else None,
+                "policy": self.policy,
+                "lease_ttl_s": self.lease_ttl_s,
+                "max_retries": self.max_retries}
+
+    def prepare_store(self, jobs=None):
+        """Create/refresh the shared store for this campaign: write the
+        manifest and submit the plan to the ledger (idempotent — known
+        keys are untouched, so re-preparing an interrupted campaign
+        resumes it).  Returns ``(store, ledger, n_new_jobs)``.  After
+        this, any ``python -m repro worker --store <dir>`` can help."""
+        from repro.cluster import ArtifactStore, JobLedger
+        from repro.runtime.fault_tolerance import RetryPolicy
+        if not self.cache_dir:
+            self.cache_dir = tempfile.mkdtemp(prefix="gainsight-campaign-")
+        store = ArtifactStore(self.cache_dir)
+        store.write_manifest(self.manifest())
+        ledger = JobLedger(
+            store, lease_ttl_s=self.lease_ttl_s,
+            retry=RetryPolicy(max_retries=self.max_retries))
+        n_new = ledger.submit(jobs if jobs is not None else self.plan())
+        return store, ledger, n_new
+
+    def _spawn_worker(self, index: int, store_dir: str):
+        """One worker subprocess (`python -m repro worker`) against the
+        shared store."""
+        import subprocess
+        import sys
+
+        import repro
+        # repro is a namespace package (__file__ is None): locate its
+        # parent via __path__ so the worker subprocess can import it.
+        src_root = os.path.dirname(
+            os.path.abspath(next(iter(repro.__path__))))
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src_root + (
+            os.pathsep + env["PYTHONPATH"]
+            if env.get("PYTHONPATH") else "")
+        return subprocess.Popen(
+            [sys.executable, "-m", "repro", "worker",
+             "--store", store_dir,
+             "--worker-id", f"w{index}-{os.getpid()}",
+             "--lease-ttl", str(self.lease_ttl_s),
+             "--max-retries", str(self.max_retries)],
+            env=env)
+
+    def _run_process(self, jobs) -> CampaignResult:
+        """Ledger-scheduled execution with worker processes + the
+        :class:`CampaignSupervisor` reclaimer."""
+        from repro.runtime.fault_tolerance import CampaignSupervisor
+        store, ledger, _ = self.prepare_store(jobs)
+        already_done = {k for k, r in ledger.snapshot().items()
+                        if r.state == "done"}
+        n_pending = sum(1 for j in jobs if j.key not in already_done)
+
+        supervisor = CampaignSupervisor(
+            ledger, spawn_worker=lambda i: self._spawn_worker(
+                i, store.root),
+            max_respawns=max(2, self.jobs),
+            poll_s=min(1.0, max(0.05, self.lease_ttl_s / 4.0)))
+        workers = []
+        if n_pending:
+            for i in range(max(1, min(self.jobs, n_pending))):
+                w = self._spawn_worker(i, store.root)
+                workers.append(w)
+                supervisor.add_worker(w)
+            try:
+                supervisor.run()
+            finally:
+                self._drain_workers(workers)
+        sup_metrics = supervisor.metrics()
+
+        records = ledger.snapshot()
+        artifacts, cached, errors = [], [], []
+        for job in jobs:
+            rec = records.get(job.key)
+            artifact = store.load(job.key)
+            if rec is not None and rec.state == "done" \
+                    and artifact is not None:
+                artifacts.append(artifact)
+                cached.append(job.key in already_done or rec.cache_hit)
+                errors.append(None)
+            else:
+                artifacts.append(None)
+                cached.append(False)
+                errors.append((rec.error if rec is not None else None)
+                              or "no artifact produced")
+        job_metrics = {k: v for k, v in sup_metrics["jobs"].items()}
+        aggregate = self._aggregate(jobs, artifacts, cached,
+                                    errors=errors,
+                                    job_metrics=job_metrics,
+                                    supervision=sup_metrics)
+        return CampaignResult(jobs=jobs, artifacts=artifacts,
+                              cached=cached, aggregate=aggregate,
+                              errors=errors, metrics=sup_metrics,
+                              scheduler="process",
+                              store_dir=store.root)
+
+    @staticmethod
+    def _drain_workers(workers, timeout_s: float = 15.0) -> None:
+        """Workers exit on their own once the ledger drains; reap them,
+        then terminate any that linger (e.g. after a supervisor error)."""
+        deadline = time.monotonic() + timeout_s
+        for w in workers:
+            if w.poll() is None:
+                try:
+                    w.wait(timeout=max(0.1, deadline - time.monotonic()))
+                except Exception:        # noqa: BLE001 - force below
+                    pass
+        for w in workers:
+            if w.poll() is None:
+                w.terminate()
+                try:
+                    w.wait(timeout=5.0)
+                except Exception:        # noqa: BLE001 - last resort
+                    w.kill()
 
     # ------------------------------------------------------------------
     # the cross-suite aggregate frontend
     # ------------------------------------------------------------------
-    def _aggregate(self, jobs, artifacts, cached) -> dict:
+    def _aggregate(self, jobs, artifacts, cached, *, errors=None,
+                   job_metrics=None, supervision=None) -> dict:
+        errors = errors or [None] * len(jobs)
         bins = [_bin_label(b) for b in self.retention_bins]
-        # backend -> sub -> accumulators
+        # backend -> sub -> accumulators (failed jobs contribute nothing)
         acc: dict = {}
         for art in artifacts:
+            if art is None:
+                continue
             slot = acc.setdefault(art["backend"], {})
             for sub, n in art["accesses"].items():
                 e = slot.setdefault(sub, {
@@ -348,23 +571,42 @@ class CampaignRunner:
                         for b in bins},
                     "per_workload": e["per_workload"]}
 
+        job_rows = []
+        for j, a, c, e in zip(jobs, artifacts, cached, errors):
+            row = {"workload": j.workload, "backend": j.backend,
+                   "key": j.key, "cached": c,
+                   "accesses": sum(a["accesses"].values()) if a else 0}
+            if e:
+                row["error"] = e
+            if job_metrics and j.key in job_metrics:
+                row["metrics"] = job_metrics[j.key]
+            job_rows.append(row)
+
+        campaign = {
+            "workloads": list(self.workloads),
+            "backends": list(self.backends),
+            "policy": self.policy,
+            "scheduler": self.scheduler,
+            "retention_bins_s": list(self.retention_bins),
+            "n_jobs": len(jobs),
+            "executed": sum(1 for c in cached if not c),
+            "cache_hits": sum(1 for c in cached if c),
+            "failed": sum(1 for e in errors if e),
+            "cache_dir": self.cache_dir,
+            "skipped": [list(s) for s in self.skipped],
+        }
+        if supervision is not None:
+            campaign["lease_ttl_s"] = self.lease_ttl_s
+            campaign["max_retries"] = self.max_retries
+            campaign["supervision"] = {
+                k: supervision[k] for k in
+                ("reclaimed_leases", "worker_deaths", "worker_respawns",
+                 "straggler_flags")}
+
         return {
             "schema": SCHEMA_VERSION,
-            "campaign": {
-                "workloads": list(self.workloads),
-                "backends": list(self.backends),
-                "policy": self.policy,
-                "retention_bins_s": list(self.retention_bins),
-                "n_jobs": len(jobs),
-                "executed": sum(1 for c in cached if not c),
-                "cache_hits": sum(1 for c in cached if c),
-                "cache_dir": self.cache_dir,
-                "skipped": [list(s) for s in self.skipped],
-            },
-            "jobs": [{"workload": j.workload, "backend": j.backend,
-                      "key": j.key, "cached": c,
-                      "accesses": sum(a["accesses"].values())}
-                     for j, a, c in zip(jobs, artifacts, cached)],
+            "campaign": campaign,
+            "jobs": job_rows,
             "aggregate": agg,
             "suite_frontiers": self._suite_frontiers(artifacts),
         }
@@ -378,6 +620,8 @@ class CampaignRunner:
         # (backend, sub, candidate) -> [w_area, w_energy, weight, n]
         cells: dict = {}
         for art in artifacts:
+            if art is None:
+                continue
             for p in art.get("sweep_points", ()):
                 w = art["accesses"].get(p["subpartition"], 0)
                 area, energy = p["area_vs_sram"], p["energy_vs_sram"]
@@ -407,6 +651,51 @@ class CampaignRunner:
 # CLI
 # ---------------------------------------------------------------------------
 
+def print_status(store_dir: str) -> dict:
+    """``--status DIR``: the ledger state of an in-flight, interrupted,
+    or finished campaign — stdlib-only, safe to run alongside workers."""
+    from repro.cluster import ArtifactStore, JobLedger
+    if not os.path.isdir(store_dir):
+        raise SystemExit(f"no campaign store at {store_dir}")
+    store = ArtifactStore(store_dir)
+    ledger = JobLedger(store)
+    records = ledger.snapshot()
+    counts = {"pending": 0, "leased": 0, "done": 0, "quarantined": 0}
+    now = time.time()
+
+    print(f"campaign store {store_dir}: {len(records)} job(s)")
+    print(f"{'key':14s} {'job':30s} {'state':12s} {'worker':18s} "
+          f"{'leases':>6s} {'retries':>7s} {'wait s':>7s} {'run s':>7s} "
+          f"{'hit'}")
+    for key, rec in records.items():
+        counts[rec.state] = counts.get(rec.state, 0) + 1
+        wait = rec.queue_wait_s
+        extra = ""
+        if rec.state == "leased":
+            try:
+                age = now - os.stat(os.path.join(
+                    store.lease_dir, f"{key}.json")).st_mtime
+                extra = f"  heartbeat {age:.1f}s ago"
+            except OSError:
+                extra = "  (no lease record)"
+        print(f"{key[:12] + '..':14s} "
+              f"{rec.workload + '@' + rec.backend:30s} "
+              f"{rec.state:12s} {str(rec.worker or '-'):18s} "
+              f"{rec.leases:6d} {rec.attempts:7d} "
+              f"{('%.2f' % wait) if wait is not None else '-':>7s} "
+              f"{('%.2f' % rec.runtime_s) if rec.runtime_s is not None else '-':>7s} "
+              f"{'yes' if rec.cache_hit else 'no'}{extra}")
+        if rec.error:
+            first = rec.error.strip().splitlines()[-1]
+            print(f"{'':14s} last error: {first[:100]}")
+    total = len(records)
+    print(f"status: {counts['done']}/{total} done, "
+          f"{counts['leased']} leased, {counts['pending']} pending, "
+          f"{counts['quarantined']} quarantined")
+    return {"counts": counts,
+            "jobs": {k: r.metrics() for k, r in records.items()}}
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser(
         prog="repro campaign",
@@ -420,7 +709,24 @@ def main(argv=None):
     ap.add_argument("--backends", default="systolic,gpu",
                     help="comma-separated backend names/aliases")
     ap.add_argument("--jobs", type=int, default=1,
-                    help="worker threads for the job pool")
+                    help="worker threads (scheduler=thread) or worker "
+                         "processes (scheduler=process)")
+    ap.add_argument("--scheduler", default="thread", choices=SCHEDULERS,
+                    help="thread: in-process pool (small campaigns, "
+                         "tests); process: lease-based worker processes "
+                         "over a shared artifact store — survives "
+                         "worker crashes and resumes from the ledger")
+    ap.add_argument("--lease-ttl", type=float, default=30.0,
+                    help="process scheduler: seconds without a "
+                         "heartbeat before a worker's lease is "
+                         "reclaimed and its job requeued")
+    ap.add_argument("--max-retries", type=int, default=3,
+                    help="process scheduler: requeues (failures or "
+                         "expiries) before a job is quarantined")
+    ap.add_argument("--status", default=None, metavar="DIR",
+                    help="print the job-ledger state of the campaign "
+                         "store at DIR (works on in-flight and "
+                         "interrupted campaigns) and exit")
     ap.add_argument("--cache-dir", default=".gainsight-cache",
                     help="on-disk trace cache (content-hash keyed); "
                          "'' disables caching")
@@ -454,6 +760,10 @@ def main(argv=None):
                          "and exit without running any backend")
     args = ap.parse_args(argv)
 
+    if args.status:
+        print_status(args.status)
+        return None
+
     sweep_axes = None if args.no_sweep else {
         "mixes": _floats(args.mixes),
         "retention_scales": _floats(args.retention_scales),
@@ -465,11 +775,14 @@ def main(argv=None):
         backend_cfg={"systolic": {"rows": args.pe, "cols": args.pe,
                                   "dataflow": args.dataflow}},
         retention_bins=_floats(args.retention_bins),
-        sweep_axes=sweep_axes, policy=args.policy)
+        sweep_axes=sweep_axes, policy=args.policy,
+        scheduler=args.scheduler, lease_ttl_s=args.lease_ttl,
+        max_retries=args.max_retries)
 
     jobs = runner.plan()
     if args.dry_run:
-        print(f"campaign plan: policy={runner.policy}")
+        print(f"campaign plan: policy={runner.policy} "
+              f"scheduler={runner.scheduler}")
         print(f"{'workload':22s} {'backend':10s} {'cache key':14s} "
               f"{'state'}")
         for job in jobs:
@@ -488,9 +801,15 @@ def main(argv=None):
     result = runner.run()
     agg = result.aggregate
 
+    failed = f", {result.failed} FAILED" if result.failed else ""
     print(f"campaign: {len(jobs)} job(s), {result.executed} executed, "
-          f"{result.cache_hits} from cache "
-          f"({args.jobs} worker(s), cache={runner.cache_dir})")
+          f"{result.cache_hits} from cache{failed} "
+          f"({runner.scheduler} scheduler, {args.jobs} worker(s), "
+          f"cache={runner.cache_dir})")
+    for job, err in zip(result.jobs, result.errors):
+        if err:
+            last = err.strip().splitlines()[-1]
+            print(f"  FAILED {job.label}: {last[:120]}")
     bins = [_bin_label(b) for b in runner.retention_bins]
     head = " ".join(f"{'<=' + b + 's':>12s}" for b in bins)
     print(f"\n{'backend/subpartition':28s} {'accesses':>10s} {head}")

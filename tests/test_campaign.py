@@ -6,6 +6,7 @@ the aggregate frontend's access-weighted math, and the
 import json
 import subprocess
 import sys
+import time
 
 import pytest
 
@@ -180,6 +181,109 @@ def test_cli_campaign_dry_run():
     assert out.returncode == 0, out.stderr
     assert "campaign dry-run ok:" in out.stdout
     assert "tinyllama_1_1b" in out.stdout
+
+
+# ---------------------------------------------------------------------------
+# satellite: a failing job is recorded, never aborts the campaign
+# ---------------------------------------------------------------------------
+
+def test_failed_job_recorded_not_propagated(tmp_path, monkeypatch):
+    """Pre-fix, a job raising inside the thread pool's ``_run_job``
+    aborted the whole campaign; now it is marked failed and the other
+    jobs complete and aggregate."""
+    real = CampaignRunner._execute
+
+    def flaky(self, job):
+        if job.workload == "polybench-2mm":
+            raise RuntimeError("injected backend fault")
+        return real(self, job)
+    monkeypatch.setattr(CampaignRunner, "_execute", flaky)
+
+    runner = _runner(tmp_path, workloads="polybench-2mm,polybench-3mm",
+                     backends=("systolic",),
+                     params={"polybench-2mm": TINY_2MM,
+                             "polybench-3mm": {"ni": 16, "nj": 16,
+                                               "nk": 16, "nl": 16,
+                                               "nm": 16}})
+    result = runner.run()                 # must not raise
+    assert result.failed == 1
+    errs = dict(zip((j.workload for j in result.jobs), result.errors))
+    assert "injected backend fault" in errs["polybench-2mm"]
+    assert errs["polybench-3mm"] is None
+
+    agg = result.aggregate
+    assert agg["campaign"]["failed"] == 1
+    # the surviving job still aggregated; the failed one contributed 0
+    for entry in agg["aggregate"]["systolic"].values():
+        assert set(entry["per_workload"]) == {"polybench-3mm"}
+    rows = {r["workload"]: r for r in agg["jobs"]}
+    assert "injected backend fault" in rows["polybench-2mm"]["error"]
+    assert rows["polybench-2mm"]["accesses"] == 0
+    assert "error" not in rows["polybench-3mm"]
+    json.dumps(agg)
+    # no half-written artifact or stale write lock left behind
+    failed_key = next(j.key for j in result.jobs
+                      if j.workload == "polybench-2mm")
+    assert not (tmp_path / "cache" / f"{failed_key}.json").exists()
+    assert not (tmp_path / "cache" / f"{failed_key}.json.lock").exists()
+    # ... so a rerun without the fault heals the campaign
+    monkeypatch.setattr(CampaignRunner, "_execute", real)
+    healed = _runner(tmp_path, workloads="polybench-2mm,polybench-3mm",
+                     backends=("systolic",),
+                     params={"polybench-2mm": TINY_2MM,
+                             "polybench-3mm": {"ni": 16, "nj": 16,
+                                               "nk": 16, "nl": 16,
+                                               "nm": 16}}).run()
+    assert healed.failed == 0
+    assert healed.executed == 1 and healed.cache_hits == 1
+
+
+# ---------------------------------------------------------------------------
+# satellite: concurrent invocations sharing one cache directory
+# ---------------------------------------------------------------------------
+
+def test_concurrent_invocations_execute_each_job_once(tmp_path,
+                                                      monkeypatch):
+    """Two campaign invocations racing on one cache_dir: the write lock
+    makes the loser wait for the winner's artifact instead of computing
+    (and clobbering) its own."""
+    import threading
+
+    calls = []
+    started = threading.Event()
+    real = CampaignRunner._execute
+
+    def slow(self, job):
+        calls.append(job.key)
+        started.set()
+        time.sleep(0.6)           # hold the write lock while B races
+        return real(self, job)
+    monkeypatch.setattr(CampaignRunner, "_execute", slow)
+
+    kw = dict(workloads="polybench-2mm", backends=("systolic",),
+              jobs=1, sweep_axes=None)
+    results = {}
+
+    def invoke(name):
+        results[name] = _runner(tmp_path, **kw).run()
+
+    a = threading.Thread(target=invoke, args=("a",))
+    a.start()
+    assert started.wait(timeout=30)   # A holds the job's write lock
+    b = threading.Thread(target=invoke, args=("b",))
+    b.start()
+    a.join(timeout=60)
+    b.join(timeout=60)
+
+    assert len(calls) == 1, "both invocations executed the same job"
+    winner, loser = results["a"], results["b"]
+    assert winner.executed == 1 and winner.cache_hits == 0
+    assert loser.executed == 0 and loser.cache_hits == 1
+    assert json.dumps(winner.aggregate["aggregate"], sort_keys=True) \
+        == json.dumps(loser.aggregate["aggregate"], sort_keys=True)
+    key = winner.jobs[0].key
+    assert (tmp_path / "cache" / f"{key}.json").exists()
+    assert not (tmp_path / "cache" / f"{key}.json.lock").exists()
 
 
 # ---------------------------------------------------------------------------

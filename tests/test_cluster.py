@@ -1,0 +1,320 @@
+"""Unit tests for the distributed-campaign scheduler pieces: the
+artifact store's concurrent-writer guarantees, the job ledger's
+lease/retry/quarantine state machine, the retry policy, the campaign
+supervisor, and the in-process worker loop."""
+
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.cluster import ArtifactStore, JobLedger
+from repro.cluster.worker import run_worker
+from repro.runtime.fault_tolerance import CampaignSupervisor, RetryPolicy
+
+TINY_2MM = {"ni": 16, "nj": 16, "nk": 16, "nl": 16}
+
+
+def _jobs(*keys):
+    return [{"key": k, "workload": f"wl-{k}", "backend": "systolic"}
+            for k in keys]
+
+
+# ---------------------------------------------------------------------------
+# ArtifactStore
+# ---------------------------------------------------------------------------
+
+def test_store_put_is_write_if_absent(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    assert store.put("k", {"v": 1}) is True
+    assert store.put("k", {"v": 2}) is False     # loser told, not clobbered
+    assert store.load("k") == {"v": 1}
+    assert store.load("missing") is None
+
+
+def test_store_write_lock_exclusive_and_stale_breaking(tmp_path):
+    store = ArtifactStore(str(tmp_path), lock_stale_s=0.2)
+    assert store.acquire_write_lock("k", "a") is True
+    assert store.acquire_write_lock("k", "b") is False
+    store.release_write_lock("k")
+    assert store.acquire_write_lock("k", "b") is True
+    # a crashed holder's lock goes stale and is broken by the contender
+    time.sleep(0.25)
+    assert store.acquire_write_lock("k", "c") is True
+
+
+def test_store_concurrent_writers_race(tmp_path):
+    """Two threads racing one key: exactly one write wins, bytes stay
+    canonical, and the loser learns it lost (the double-bill guard the
+    thread scheduler builds on)."""
+    store = ArtifactStore(str(tmp_path))
+    results = []
+
+    def writer(tag):
+        results.append((tag, store.put("k", {"writer": tag})))
+
+    threads = [threading.Thread(target=writer, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sum(1 for _, won in results if won) == 1
+    winner = [tag for tag, won in results if won][0]
+    assert store.load("k") == {"writer": winner}
+    # no stray temp files left behind
+    assert [f for f in os.listdir(tmp_path) if f.endswith(".tmp")] == []
+
+
+def test_store_wait_for_returns_artifact_or_times_out(tmp_path):
+    store = ArtifactStore(str(tmp_path))
+    store.acquire_write_lock("k", "other")
+
+    def finish():
+        time.sleep(0.1)
+        store.put("k", {"done": True})
+        store.release_write_lock("k")
+
+    t = threading.Thread(target=finish)
+    t.start()
+    assert store.wait_for("k", timeout_s=5.0) == {"done": True}
+    t.join()
+    assert store.wait_for("never", timeout_s=0.1) is None
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy
+# ---------------------------------------------------------------------------
+
+def test_retry_policy_backoff_and_budget():
+    p = RetryPolicy(max_retries=3, backoff_base_s=0.5, backoff_cap_s=4.0)
+    assert p.delay_s(1) == pytest.approx(0.5)
+    assert p.delay_s(2) == pytest.approx(1.0)
+    assert p.delay_s(3) == pytest.approx(2.0)
+    assert p.delay_s(10) == pytest.approx(4.0)    # capped
+    assert not p.exhausted(2)
+    assert p.exhausted(3)
+
+
+# ---------------------------------------------------------------------------
+# JobLedger
+# ---------------------------------------------------------------------------
+
+def test_ledger_submit_is_idempotent_by_key(tmp_path):
+    led = JobLedger(str(tmp_path))
+    assert led.submit(_jobs("a", "b")) == 2
+    assert led.submit(_jobs("a", "b", "c")) == 1   # only c is new
+    assert led.counts() == {"pending": 3, "leased": 0, "done": 0,
+                            "quarantined": 0}
+
+
+def test_ledger_acquire_fifo_and_lease_lifecycle(tmp_path):
+    led = JobLedger(str(tmp_path))
+    led.submit(_jobs("a", "b"))
+    r1 = led.acquire("w0")
+    assert (r1.key, r1.state, r1.worker) == ("a", "leased", "w0")
+    assert os.path.exists(os.path.join(led.store.lease_dir, "a.json"))
+    assert led.acquire("w1").key == "b"
+    assert led.acquire("w2") is None               # drained
+    assert led.heartbeat("a", "w0") is True
+    assert led.heartbeat("a", "not-the-holder") is False
+    # completion is holder-guarded: a reclaimed/stolen lease can't land
+    assert led.complete("a", "w1") is False
+    assert led.complete("a", "w0", runtime_s=1.5) is True
+    rec = led.snapshot()["a"]
+    assert rec.state == "done" and rec.runtime_s == 1.5
+    assert not os.path.exists(os.path.join(led.store.lease_dir, "a.json"))
+    assert led.outstanding() == 1
+
+
+def test_ledger_fail_requeues_with_backoff_then_quarantines(tmp_path):
+    led = JobLedger(str(tmp_path),
+                    retry=RetryPolicy(max_retries=2, backoff_base_s=0.05))
+    led.submit(_jobs("a"))
+    led.acquire("w0")
+    assert led.fail("a", "w0", "boom-1") is True
+    rec = led.snapshot()["a"]
+    assert rec.state == "pending" and rec.attempts == 1
+    assert rec.error == "boom-1"
+    assert rec.not_before > time.time() - 0.01     # backoff gate set
+    assert led.acquire("w0") is None               # still backing off
+    time.sleep(0.08)
+    assert led.acquire("w0").key == "a"
+    led.fail("a", "w0", "boom-2")                  # budget (2) spent
+    rec = led.snapshot()["a"]
+    assert rec.state == "quarantined" and rec.attempts == 2
+    assert led.outstanding() == 0                  # terminal
+    assert led.acquire("w0") is None
+
+
+def test_ledger_reclaims_expired_leases_only(tmp_path):
+    led = JobLedger(str(tmp_path), lease_ttl_s=0.3,
+                    retry=RetryPolicy(backoff_base_s=0.01))
+    led.submit(_jobs("a", "b"))
+    led.acquire("dead-worker")
+    led.acquire("live-worker")
+    t_end = time.time() + 0.45
+    while time.time() < t_end:                     # only b heartbeats
+        led.heartbeat("b", "live-worker")
+        time.sleep(0.05)
+    assert led.reclaim_expired() == ["a"]
+    snap = led.snapshot()
+    assert snap["a"].state == "pending" and snap["a"].attempts == 1
+    assert "lease expired" in snap["a"].error
+    assert snap["b"].state == "leased"             # heartbeats kept it
+
+
+def test_ledger_acquire_never_double_leases_under_contention(tmp_path):
+    led = JobLedger(str(tmp_path))
+    led.submit(_jobs(*[f"j{i}" for i in range(6)]))
+    got, lock = [], threading.Lock()
+
+    def grab(w):
+        while True:
+            rec = led.acquire(w)
+            if rec is None:
+                return
+            with lock:
+                got.append(rec.key)
+
+    threads = [threading.Thread(target=grab, args=(f"w{i}",))
+               for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert sorted(got) == sorted(f"j{i}" for i in range(6))   # no dupes
+
+
+def test_ledger_survives_torn_trailing_write(tmp_path):
+    led = JobLedger(str(tmp_path))
+    led.submit(_jobs("a"))
+    with open(led.store.ledger_path, "a") as f:
+        f.write('{"event": "lease", "key": "a", "wor')   # killed mid-append
+    snap = led.snapshot()
+    assert snap["a"].state == "pending"            # torn line ignored
+    assert led.acquire("w0").key == "a"
+
+
+# ---------------------------------------------------------------------------
+# CampaignSupervisor
+# ---------------------------------------------------------------------------
+
+class _FakeWorker:
+    def __init__(self, exitcode=None):
+        self.exitcode = exitcode
+
+    def poll(self):
+        return self.exitcode
+
+
+def test_supervisor_respawns_dead_workers_once(tmp_path):
+    led = JobLedger(str(tmp_path))
+    led.submit(_jobs("a"))
+    spawned = []
+
+    def spawn(i):
+        w = _FakeWorker()
+        spawned.append(w)
+        return w
+
+    sup = CampaignSupervisor(led, spawn_worker=spawn, max_respawns=2)
+    dead = _FakeWorker(exitcode=-9)
+    sup.add_worker(dead)
+    sup.tick()
+    assert sup.worker_deaths == 1 and sup.respawns == 1
+    assert len(spawned) == 1 and sup.workers == spawned
+    sup.tick()                                     # same death not recounted
+    assert sup.worker_deaths == 1 and sup.respawns == 1
+
+
+def test_supervisor_run_raises_when_all_workers_dead(tmp_path):
+    led = JobLedger(str(tmp_path))
+    led.submit(_jobs("a"))
+    sup = CampaignSupervisor(led, spawn_worker=None, poll_s=0.01)
+    sup.add_worker(_FakeWorker(exitcode=1))
+    with pytest.raises(RuntimeError, match="all campaign workers died"):
+        sup.run()
+
+
+def test_supervisor_reclaims_and_reports_metrics(tmp_path):
+    led = JobLedger(str(tmp_path), lease_ttl_s=0.1,
+                    retry=RetryPolicy(backoff_base_s=0.01))
+    led.submit(_jobs("a", "b"))
+    led.acquire("w0")
+    time.sleep(0.15)
+    sup = CampaignSupervisor(led)
+    assert sup.tick() == ["a"]
+    time.sleep(0.05)                               # clear a's backoff gate
+    r1 = led.acquire("w1")                         # FIFO: a again
+    assert r1.key == "a"
+    led.complete("a", "w1", runtime_s=0.2)
+    r2 = led.acquire("w1")
+    assert r2.key == "b"
+    led.complete("b", "w1", cache_hit=True, runtime_s=0.01)
+    m = sup.run()
+    assert m["reclaimed_leases"] == ["a"]
+    assert m["worker_deaths"] == 0
+    assert m["jobs"]["a"]["retries"] == 1 and m["jobs"]["a"]["leases"] == 2
+    assert m["jobs"]["b"]["cache_hit"] is True
+    assert m["jobs"]["a"]["queue_wait_s"] >= 0.0
+    json.dumps(m)                                  # report-embeddable
+
+
+# ---------------------------------------------------------------------------
+# the worker loop (in-process, real tiny campaign)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def tiny_runner(tmp_path):
+    from repro.launch.campaign import CampaignRunner
+    return CampaignRunner(
+        "polybench-2mm", ("systolic",), cache_dir=str(tmp_path / "store"),
+        params={"polybench-2mm": TINY_2MM},
+        backend_cfg={"systolic": {"rows": 16, "cols": 16}},
+        sweep_axes=None, scheduler="process", lease_ttl_s=5.0)
+
+
+def test_worker_drains_store_and_writes_artifacts(tiny_runner):
+    store, ledger, n = tiny_runner.prepare_store()
+    assert n == 1
+    tally = run_worker(store.root, worker_id="w-test", poll_s=0.02)
+    assert tally == {"worker": "w-test", "done": 1, "cache_hits": 0,
+                     "failed": 0}
+    [rec] = ledger.snapshot().values()
+    assert rec.state == "done" and rec.runtime_s > 0
+    assert store.load(rec.key)["workload"] == "polybench-2mm"
+    # a second worker finds nothing to do and exits immediately
+    assert run_worker(store.root, worker_id="w-2")["done"] == 0
+
+
+def test_worker_completes_preexisting_artifact_as_cache_hit(tiny_runner):
+    store, ledger, _ = tiny_runner.prepare_store()
+    [job] = tiny_runner.plan()
+    store.put(job.key, {"workload": "polybench-2mm", "accesses": {},
+                        "short_lived": {}, "sweep_points": [],
+                        "backend": "systolic"})
+    tally = run_worker(store.root, worker_id="w", poll_s=0.02)
+    assert tally["done"] == 1 and tally["cache_hits"] == 1
+    assert ledger.snapshot()[job.key].cache_hit is True
+
+
+def test_worker_quarantines_poison_job_and_exits(tiny_runner, monkeypatch):
+    from repro.launch.campaign import CampaignRunner
+    tiny_runner.max_retries = 2
+    store, ledger, _ = tiny_runner.prepare_store()
+
+    def boom(self, job):
+        raise RuntimeError("injected poison job")
+    monkeypatch.setattr(CampaignRunner, "_execute", boom)
+
+    ledger.retry = RetryPolicy(max_retries=2, backoff_base_s=0.01)
+    tally = run_worker(store.root, worker_id="w", poll_s=0.02,
+                       retry=RetryPolicy(max_retries=2,
+                                         backoff_base_s=0.01))
+    assert tally["failed"] == 2 and tally["done"] == 0
+    [rec] = ledger.snapshot().values()
+    assert rec.state == "quarantined" and rec.attempts == 2
+    assert "injected poison job" in rec.error

@@ -1,0 +1,196 @@
+"""Integration tests for the process scheduler: thread/process
+equivalence (byte-identical artifacts + aggregates), resume from the
+ledger, and the kill-a-worker fault-tolerance story — a SIGKILLed
+worker costs only its in-flight job and the campaign still converges
+to the clean single-worker result.
+
+Workloads are tiny systolic-only GEMM chains so worker processes never
+pay the jax import; the whole module runs in tens of seconds.
+"""
+
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.launch.campaign import CampaignRunner
+
+TINY = {"polybench-2mm": {"ni": 24, "nj": 20, "nk": 16, "nl": 28},
+        "polybench-3mm": {"ni": 16, "nj": 16, "nk": 16, "nl": 16,
+                          "nm": 16}}
+SMALL_AXES = {"mixes": (0.0, 1.0), "retention_scales": (1.0,),
+              "per_mix": False}
+
+
+def _runner(cache_dir, **kw):
+    defaults = dict(
+        jobs=2, cache_dir=str(cache_dir), params=TINY,
+        backend_cfg={"systolic": {"rows": 16, "cols": 16}},
+        sweep_axes=SMALL_AXES)
+    defaults.update(kw)
+    return CampaignRunner("polybench-2mm,polybench-3mm", ("systolic",),
+                          **defaults)
+
+
+def _spawn_worker(store_dir, worker_id, lease_ttl, fault=None):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in (os.path.join(os.path.dirname(
+            os.path.dirname(os.path.abspath(__file__))), "src"),
+            env.get("PYTHONPATH")) if p)
+    if fault:
+        env["GAINSIGHT_WORKER_FAULT"] = fault
+    return subprocess.Popen(
+        [sys.executable, "-m", "repro", "worker", "--store", store_dir,
+         "--worker-id", worker_id, "--lease-ttl", str(lease_ttl),
+         "--poll", "0.05"], env=env)
+
+
+# ---------------------------------------------------------------------------
+# thread/process equivalence — the acceptance criterion
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def both_schedulers(tmp_path_factory):
+    tmp = tmp_path_factory.mktemp("sched")
+    thread = _runner(tmp / "thread", scheduler="thread").run()
+    process = _runner(tmp / "process", scheduler="process",
+                      lease_ttl_s=15.0).run()
+    return tmp, thread, process
+
+
+def test_process_scheduler_runs_all_jobs(both_schedulers):
+    _, _, process = both_schedulers
+    assert process.scheduler == "process"
+    assert process.executed == 2 and process.failed == 0
+    m = process.metrics
+    assert m["worker_deaths"] == 0 and m["reclaimed_leases"] == []
+    for job_metrics in m["jobs"].values():
+        assert job_metrics["state"] == "done"
+        assert job_metrics["leases"] == 1 and job_metrics["retries"] == 0
+        assert job_metrics["runtime_s"] > 0
+        assert job_metrics["queue_wait_s"] >= 0
+
+
+def test_process_artifacts_byte_identical_to_thread(both_schedulers):
+    tmp, thread, process = both_schedulers
+    assert [j.key for j in thread.jobs] == [j.key for j in process.jobs]
+    for job in thread.jobs:
+        a = (tmp / "thread" / f"{job.key}.json").read_bytes()
+        b = (tmp / "process" / f"{job.key}.json").read_bytes()
+        assert a == b, f"artifact {job.label} differs across schedulers"
+
+
+def test_process_aggregates_identical_to_thread(both_schedulers):
+    _, thread, process = both_schedulers
+    for section in ("aggregate", "suite_frontiers"):
+        assert json.dumps(thread.aggregate[section], sort_keys=True) == \
+            json.dumps(process.aggregate[section], sort_keys=True)
+
+
+def test_process_rerun_is_all_cache_hits(both_schedulers):
+    tmp, _, first = both_schedulers
+    again = _runner(tmp / "process", scheduler="process").run()
+    assert again.executed == 0 and again.cache_hits == 2
+    assert json.dumps(again.aggregate["aggregate"], sort_keys=True) == \
+        json.dumps(first.aggregate["aggregate"], sort_keys=True)
+
+
+def test_per_job_observability_in_report(both_schedulers):
+    _, _, process = both_schedulers
+    for row in process.aggregate["jobs"]:
+        m = row["metrics"]
+        assert set(m) >= {"state", "worker", "leases", "retries",
+                          "cache_hit", "queue_wait_s", "runtime_s"}
+    sup = process.aggregate["campaign"]["supervision"]
+    assert sup["worker_deaths"] == 0 and sup["worker_respawns"] == 0
+    json.dumps(process.aggregate)            # whole report serializable
+
+
+# ---------------------------------------------------------------------------
+# kill a worker mid-job: only its in-flight job is re-run
+# ---------------------------------------------------------------------------
+
+def test_kill_worker_requeues_only_inflight_job(tmp_path):
+    lease_ttl = 2.0
+    runner = _runner(tmp_path / "store", scheduler="process",
+                     lease_ttl_s=lease_ttl)
+    store, ledger, n_new = runner.prepare_store()
+    assert n_new == 2
+
+    # victim leases its first job, then sleeps "wedged" until SIGKILL
+    victim = _spawn_worker(store.root, "victim", lease_ttl,
+                           fault="sleep-after-acquire:120")
+    try:
+        deadline = time.monotonic() + 60
+        victim_key = None
+        while time.monotonic() < deadline and victim_key is None:
+            leased = [k for k, r in ledger.snapshot().items()
+                      if r.state == "leased" and r.worker == "victim"]
+            victim_key = leased[0] if leased else None
+            time.sleep(0.05)
+        assert victim_key, "victim never leased a job"
+    finally:
+        victim.send_signal(signal.SIGKILL)
+        victim.wait(timeout=10)
+
+    survivor = _spawn_worker(store.root, "survivor", lease_ttl)
+    assert survivor.wait(timeout=120) == 0
+
+    snap = ledger.snapshot()
+    assert all(r.state == "done" for r in snap.values())
+    # the acceptance criterion: ONLY the in-flight job was re-leased
+    assert snap[victim_key].leases == 2
+    assert snap[victim_key].attempts == 1
+    assert snap[victim_key].error is None     # error cleared on done
+    for key, rec in snap.items():
+        if key != victim_key:
+            assert rec.leases == 1 and rec.attempts == 0
+        assert rec.worker == "survivor"
+
+    # the interrupted campaign, restarted, resumes from the ledger and
+    # matches a clean single-worker thread run exactly
+    resumed = _runner(tmp_path / "store", scheduler="process").run()
+    assert resumed.executed == 0 and resumed.cache_hits == 2
+    clean = _runner(tmp_path / "clean", scheduler="thread", jobs=1).run()
+    assert json.dumps(resumed.aggregate["aggregate"], sort_keys=True) \
+        == json.dumps(clean.aggregate["aggregate"], sort_keys=True)
+    assert json.dumps(resumed.aggregate["suite_frontiers"],
+                      sort_keys=True) \
+        == json.dumps(clean.aggregate["suite_frontiers"], sort_keys=True)
+    for job in resumed.jobs:
+        assert (tmp_path / "store" / f"{job.key}.json").read_bytes() == \
+            (tmp_path / "clean" / f"{job.key}.json").read_bytes()
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+def test_cli_dry_run_process_scheduler():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro", "campaign", "--dry-run",
+         "--scheduler", "process", "--cache-dir", ""],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "scheduler=process" in out.stdout
+    assert "campaign dry-run ok:" in out.stdout
+
+
+def test_cli_status_reports_ledger_state(tmp_path):
+    runner = _runner(tmp_path / "store", scheduler="process")
+    store, ledger, _ = runner.prepare_store()
+    ledger.acquire("w-status")
+    out = subprocess.run(
+        [sys.executable, "-m", "repro", "campaign", "--status",
+         store.root],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "2 job(s)" in out.stdout
+    assert "leased" in out.stdout and "pending" in out.stdout
+    assert "w-status" in out.stdout
+    assert "1 leased, 1 pending" in out.stdout
