@@ -26,6 +26,11 @@ Subcommands:
   worker     join an in-flight process-scheduled campaign: lease jobs
              from a shared artifact store (``--store DIR``), heartbeat,
              execute, and write artifacts until the queue drains
+  check      static contract analysis over the repo's own AST: import
+             purity, int64 dtype safety, registry conformance,
+             cache-key schema drift, atomic-write discipline
+             (``--format json`` for CI artifacts, ``--list-rules``,
+             ``--write-baseline``, ``--update-schema-manifest``)
   workloads  list the registered workload specs (name, suite, backends)
   backends   list the registered profiling backends
 
@@ -44,6 +49,8 @@ Examples::
   PYTHONPATH=src python -m repro campaign --status .gainsight-cache
   PYTHONPATH=src python -m repro worker --store .gainsight-cache
   PYTHONPATH=src python -m repro campaign --dry-run
+  PYTHONPATH=src python -m repro check
+  PYTHONPATH=src python -m repro check --format json
   PYTHONPATH=src python -m repro workloads
   PYTHONPATH=src python -m repro backends
 """
@@ -77,6 +84,9 @@ def main(argv=None) -> int:
         from repro.cluster.worker import main as worker_main
         worker_main(rest)
         return 0
+    if cmd == "check":
+        from repro.analysis.cli import main as check_main
+        return check_main(rest)
     if cmd == "workloads":
         from repro.workloads import available_workloads, get_workload
         for name in available_workloads():

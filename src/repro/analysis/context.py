@@ -1,0 +1,109 @@
+"""The analysis context: file discovery, cached parsing, module naming.
+
+An :class:`AnalysisContext` wraps one source tree — a directory whose
+``repro/`` subdirectory is the package to analyze.  For the repo itself
+that is ``src/``; test fixtures point it at miniature trees under
+``tests/fixtures/analysis/``.  Rules only ever *parse* files (the
+analyzed code is never imported), so a fixture tree may freely contain
+deliberate contract violations.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+
+PACKAGE = "repro"
+
+
+def default_root() -> str:
+    """The source root of the running ``repro`` package (its parent
+    directory), so ``python -m repro check`` analyzes itself."""
+    import repro
+    # repro is a namespace package (__file__ is None): locate the tree
+    # via __path__, as repro.launch.campaign does for worker spawning.
+    pkg_dir = os.path.abspath(next(iter(repro.__path__)))
+    return os.path.dirname(pkg_dir)
+
+
+class AnalysisContext:
+    """One analyzed tree + parse caches shared by every rule."""
+
+    def __init__(self, root: str):
+        self.root = os.path.abspath(root)
+        self.pkg_dir = os.path.join(self.root, PACKAGE)
+        if not os.path.isdir(self.pkg_dir):
+            raise FileNotFoundError(
+                f"no '{PACKAGE}/' package under analysis root {self.root}")
+        self._ast: dict = {}
+        self._lines: dict = {}
+        self._files: list | None = None
+
+    # -- discovery -----------------------------------------------------
+    def files(self) -> list:
+        """All ``.py`` files under the package, sorted, absolute."""
+        if self._files is None:
+            out = []
+            for dirpath, dirnames, filenames in os.walk(self.pkg_dir):
+                dirnames[:] = sorted(d for d in dirnames
+                                     if d != "__pycache__")
+                for fn in sorted(filenames):
+                    if fn.endswith(".py"):
+                        out.append(os.path.join(dirpath, fn))
+            self._files = out
+        return self._files
+
+    def rel(self, path: str) -> str:
+        """Root-relative posix path (the identity used in findings)."""
+        return os.path.relpath(path, self.root).replace(os.sep, "/")
+
+    def abs(self, rel: str) -> str:
+        return os.path.join(self.root, rel.replace("/", os.sep))
+
+    def glob(self, *patterns: str) -> list:
+        """Files whose root-relative path matches any shell pattern."""
+        import fnmatch
+        out = []
+        for path in self.files():
+            r = self.rel(path)
+            if any(fnmatch.fnmatch(r, pat) for pat in patterns):
+                out.append(path)
+        return out
+
+    # -- module naming -------------------------------------------------
+    def module_name(self, path: str) -> str:
+        """``repro/a/b.py`` -> ``repro.a.b``; ``__init__.py`` names its
+        package."""
+        r = self.rel(path)
+        assert r.endswith(".py")
+        parts = r[:-3].split("/")
+        if parts[-1] == "__init__":
+            parts = parts[:-1]
+        return ".".join(parts)
+
+    def module_path(self, module: str) -> str | None:
+        """Absolute file for a dotted module name, or None if the
+        module does not exist in this tree (e.g. an external import or
+        a namespace package with no ``__init__.py``)."""
+        base = os.path.join(self.root, *module.split("."))
+        for cand in (base + ".py", os.path.join(base, "__init__.py")):
+            if os.path.isfile(cand):
+                return cand
+        return None
+
+    # -- parsing -------------------------------------------------------
+    def ast_of(self, path: str) -> ast.Module:
+        if path not in self._ast:
+            with open(path, encoding="utf-8") as f:
+                src = f.read()
+            self._ast[path] = ast.parse(src, filename=path)
+        return self._ast[path]
+
+    def source_lines(self, path: str) -> list:
+        if path not in self._lines:
+            try:
+                with open(path, encoding="utf-8") as f:
+                    self._lines[path] = f.read().splitlines()
+            except OSError:
+                self._lines[path] = []
+        return self._lines[path]

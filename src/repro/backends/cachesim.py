@@ -101,7 +101,7 @@ def _simulate_cache(line_addr, is_write, n_sets, ways, write_allocate):
 
 @partial(jax.jit, static_argnames=("n_sets", "ways", "write_allocate"))
 def _simulate_cache_scan(line_addr, is_write, n_sets, ways, write_allocate):
-    addrs = jnp.asarray(line_addr)
+    addrs = jnp.asarray(line_addr, jnp.int64)
     dt = addrs.dtype
     tags0 = jnp.full((n_sets, ways), -1, dt)
     dirty0 = jnp.zeros((n_sets, ways), bool)

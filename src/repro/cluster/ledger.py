@@ -38,6 +38,7 @@ import dataclasses
 import json
 import os
 import socket
+import tempfile
 import time
 
 from repro.cluster.store import ArtifactStore
@@ -215,11 +216,22 @@ class JobLedger:
         return os.path.join(self.store.lease_dir, f"{key}.json")
 
     def _write_lease(self, key: str, worker: str) -> None:
+        # tmp + os.replace: a reclaiming scheduler parsing this lease
+        # concurrently must never see a torn JSON record, and replace()
+        # refreshes the mtime that heartbeat()/is_expired() key on.
         path = self._lease_path(key)
-        with open(path, "w") as f:
-            json.dump({"worker": worker, "pid": os.getpid(),
-                       "acquired": time.time(),
-                       "ttl_s": self.lease_ttl_s}, f)
+        fd, tmp = tempfile.mkstemp(dir=self.store.lease_dir,
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"worker": worker, "pid": os.getpid(),
+                           "acquired": time.time(),
+                           "ttl_s": self.lease_ttl_s}, f)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
 
     def _drop_lease(self, key: str) -> None:
         try:

@@ -21,6 +21,36 @@ from repro.kernels.lifetime_scan.kernel import lifetime_scan_sorted
 SENTINEL = 2 ** 31 - 10
 
 
+class KernelRangeError(OverflowError):
+    """An input field exceeds the kernel's int32 carrying capacity.
+
+    Subclasses ``OverflowError`` so existing ``except OverflowError``
+    fallbacks keep working, but carries the offending field and bounds
+    so callers (and logs) can say *which* value broke the contract and
+    what to do about it instead of parsing a message.
+
+    Attributes:
+      field:   "time_cycles" or "addr" — the offending input
+      lo, hi:  observed min/max of that field
+      limit:   half-open valid range ``(lo_ok, hi_ok)`` for the field
+      remediation: one-line fix, always naming the int64 numpy/jnp
+        fallback (``repro.core.lifetime``)
+    """
+
+    def __init__(self, field: str, lo: int, hi: int,
+                 limit: tuple, remediation: str):
+        self.field = field
+        self.lo = lo
+        self.hi = hi
+        self.limit = limit
+        self.remediation = remediation
+        super().__init__(
+            f"lifetime_scan kernel is int32: {field} range "
+            f"[{lo}, {hi}] exceeds the valid half-open range "
+            f"[{limit[0]}, {limit[1]}) (offending extreme: "
+            f"{hi if hi >= limit[1] else lo}); {remediation}")
+
+
 def _on_tpu() -> bool:
     try:
         return jax.devices()[0].platform == "tpu"
@@ -70,17 +100,20 @@ def lifetime_histogram(time_cycles, addr, is_write, edges=None,
     a_np = np.asarray(addr)
     if t_np.size:
         if int(t_np.min()) < -(2 ** 31) or int(t_np.max()) >= 2 ** 31:
-            raise OverflowError(
-                "lifetime_scan kernel is int32: time_cycles outside "
-                f"[-2^31, 2^31) (got [{int(t_np.min())}, "
-                f"{int(t_np.max())}]); rebase the trace or use "
-                "repro.core.lifetime (int64) instead")
+            raise KernelRangeError(
+                "time_cycles", int(t_np.min()), int(t_np.max()),
+                (-(2 ** 31), 2 ** 31),
+                remediation="rebase the trace (subtract the start "
+                            "cycle) or use the int64 numpy/jnp fallback "
+                            "repro.core.lifetime.lifetime_histogram")
         if int(a_np.min()) < 0 or int(a_np.max()) >= SENTINEL:
-            raise OverflowError(
-                "lifetime_scan kernel is int32: addresses must lie in "
-                f"[0, {SENTINEL}) (got [{int(a_np.min())}, "
-                f"{int(a_np.max())}]); remap addresses or use "
-                "repro.core.lifetime (int64) instead")
+            raise KernelRangeError(
+                "addr", int(a_np.min()), int(a_np.max()),
+                (0, SENTINEL),
+                remediation="remap addresses into the dense [0, "
+                            f"{SENTINEL}) window or use the int64 "
+                            "numpy/jnp fallback "
+                            "repro.core.lifetime.lifetime_histogram")
     t = jnp.asarray(t_np, jnp.int32)
     a = jnp.asarray(a_np, jnp.int32)
     w = jnp.asarray(is_write, jnp.int32)

@@ -1,0 +1,19 @@
+"""Violating twin: two import-time leaks from a declared-pure package.
+
+`repro.helper` is internal and stdlib-looking, but its own top-level
+`import numpy` executes the moment this package is imported — the
+transitive chain the subprocess probes could only witness one ordering
+of.  The try-block jax import also runs at import time (the rule counts
+both branches conservatively).
+"""
+
+from repro.helper import centroid
+
+try:
+    import jax
+except ImportError:
+    jax = None
+
+
+def plan():
+    return centroid([1, 2, 3])

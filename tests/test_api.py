@@ -333,9 +333,27 @@ def test_compose_truly_empty_trace_is_nan_ratio():
 # ---------------------------------------------------------------------------
 
 def test_cli_profile_dry_run():
+    # The one retained subprocess smoke: exercises the real interpreter
+    # + entry point end to end.  Per-module import-hygiene probes moved
+    # to the static analyzer (test_import_contracts_hold_statically).
     out = subprocess.run(
         [sys.executable, "-m", "repro", "profile", "--backend", "systolic",
          "--dry-run"],
         capture_output=True, text=True, timeout=600)
     assert out.returncode == 0, out.stderr
     assert "dry-run ok: backend=systolic" in out.stdout
+
+
+def test_import_contracts_hold_statically():
+    """Analyzer-based replacement for the old subprocess import probes:
+    the default contract set (workloads/cluster recursive, __main__,
+    campaign's dry-run path, compose.policies) holds over the static
+    import graph — every import order, not just the one a subprocess
+    happened to witness."""
+    from repro.analysis import AnalysisContext, default_root
+    from repro.analysis.imports import DEFAULT_CONTRACTS, ImportPurityRule
+    ctx = AnalysisContext(default_root())
+    assert ImportPurityRule().run(ctx) == []
+    covered = {c.module for c in DEFAULT_CONTRACTS}
+    assert {"repro.workloads", "repro.cluster", "repro.launch.campaign",
+            "repro.compose.policies", "repro.__main__"} <= covered

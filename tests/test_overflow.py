@@ -138,3 +138,34 @@ def test_lifetime_scan_kernel_int32_guard():
         lifetime_histogram(np.array([0, 1], np.int64),
                            np.array([0, 2 ** 31 - 5], np.int64),
                            np.array([1, 0], np.int64))
+
+
+def test_lifetime_scan_kernel_structured_range_error():
+    """KernelRangeError carries the offending field/bounds as attributes
+    (not just prose) and always names the int64 fallback."""
+    from repro.kernels.lifetime_scan.ops import (KernelRangeError,
+                                                 SENTINEL,
+                                                 lifetime_histogram)
+    bad_cycle = 2 ** 31 + 7
+    with pytest.raises(KernelRangeError) as ei:
+        lifetime_histogram(np.array([0, bad_cycle], np.int64),
+                           np.array([1, 1], np.int64),
+                           np.array([1, 0], np.int64))
+    err = ei.value
+    assert isinstance(err, OverflowError)  # legacy handlers still catch
+    assert err.field == "time_cycles"
+    assert err.hi == bad_cycle
+    assert err.limit == (-(2 ** 31), 2 ** 31)
+    assert str(bad_cycle) in str(err)  # offending max cycle in message
+    assert "repro.core.lifetime" in err.remediation
+
+    bad_addr = SENTINEL + 3
+    with pytest.raises(KernelRangeError) as ei:
+        lifetime_histogram(np.array([0, 1], np.int64),
+                           np.array([0, bad_addr], np.int64),
+                           np.array([1, 0], np.int64))
+    err = ei.value
+    assert err.field == "addr"
+    assert err.hi == bad_addr
+    assert err.limit == (0, SENTINEL)
+    assert "repro.core.lifetime" in err.remediation

@@ -4,8 +4,6 @@ the legacy profile-CLI bit-for-bit lock, and the jax-free import
 contract that keeps test collection fast."""
 
 import json
-import subprocess
-import sys
 
 import pytest
 
@@ -89,15 +87,25 @@ def test_with_params_and_content_hash():
 # ---------------------------------------------------------------------------
 
 def test_workloads_package_imports_without_jax():
-    out = subprocess.run(
-        [sys.executable, "-c",
-         "import sys; import repro.workloads; "
-         "assert 'jax' not in sys.modules, 'jax leaked'; "
-         "assert 'repro.backends.systolic' not in sys.modules; "
-         "print(len(repro.workloads.available_workloads()))"],
-        capture_output=True, text=True, timeout=120)
-    assert out.returncode == 0, out.stderr
-    assert int(out.stdout) > 20
+    """Analyzer-based: the static import graph proves repro.workloads
+    (recursively) never reaches jax/numpy at import time — stronger than
+    the old one-interpreter subprocess probe, which only witnessed a
+    single import order."""
+    from repro.analysis import AnalysisContext, default_root
+    from repro.analysis.imports import (ImportContract, ImportPurityRule,
+                                        build_import_graph)
+    ctx = AnalysisContext(default_root())
+    rule = ImportPurityRule(contracts=(
+        ImportContract("repro.workloads", ("jax", "numpy"),
+                       recursive=True),))
+    assert rule.run(ctx) == []
+    # the graph must actually cover the package (guards against the
+    # contract silently matching zero modules)
+    graph = build_import_graph(ctx)
+    covered = [m for m in graph
+               if m == "repro.workloads"
+               or m.startswith("repro.workloads.")]
+    assert len(covered) >= 3, covered
 
 
 # ---------------------------------------------------------------------------
