@@ -81,4 +81,19 @@ def composer_bench():
           f"(DEFAULT_DEVICES): {gain:.3f}x")
     rows.append(f"composer.refresh_aware_gain,{gain:.4f},"
                 "rf_energy/ra_energy")
+
+    # asymmetric per-operation billing: refresh-aware over a mixed
+    # SRAM + SOT-MRAM + gain-cell set (read_fj != write_fj exercises
+    # the op_energy_fj seam the symmetric grids never touch)
+    from repro.devices import get_device_family
+    asym = (get_device_family("sram-gaincell-default").build()
+            + get_device_family("sot-mram").build()[1:])
+    asym_cands = [asym] * len(cands)
+    t_asym = _best_of(lambda: evaluate(
+        asym_cands, stats, raw=raw, clock_hz=CLOCK_HZ,
+        policy="refresh-aware"))
+    print(f"{'asymmetric':16s} batched {t_asym * 1e3:8.1f} ms  "
+          f"(SRAM+gaincell+SOT-MRAM, refresh-aware)")
+    rows.append(f"composer.asymmetric.batched,{t_asym * 1e6:.1f},"
+                f"devices={len(asym)}")
     return rows

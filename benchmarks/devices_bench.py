@@ -1,0 +1,47 @@
+"""Device-family registry throughput: the campaign planner's hot loops.
+
+Campaign planning enumerates ``FamilyGrid`` candidates (one
+``DeviceFamily.build`` per parameter point) and resolves family cache
+identities (``DeviceFamily.content``) for every job key — both on the
+stdlib-only planning path, so they must stay cheap enough to run per
+``--dry-run`` without a warm numpy import.  The bench times:
+
+  ``devices.lookup``            registry resolution incl. aliases
+  ``devices.family_grid.candidates``  full candidate enumeration
+                                (sot-mram default axes: 6 builds + anchor)
+  ``devices.build``             one sot-mram lowering (params -> devices)
+  ``devices.content``           one cache-identity resolution
+"""
+
+from __future__ import annotations
+
+from benchmarks.sweep_bench import _best_of
+
+
+def devices_bench():
+    from repro.devices import get_device_family
+    from repro.sweep import FamilyGrid
+
+    rows = []
+    print("\n=== device-family registry ===")
+
+    def lookup():
+        for name in ("sram", "gaincell", "opengcram",
+                     "sram-gaincell-default", "sot-mram"):
+            get_device_family(name)
+
+    grid = FamilyGrid("sot-mram")
+    fam = get_device_family("sot-mram")
+    n_cands = len(grid)
+    benches = (
+        ("devices.lookup", lookup, "names=5 (incl. aliases)"),
+        ("devices.family_grid.candidates", grid.candidates,
+         f"family=sot-mram points={n_cands}"),
+        ("devices.build", fam.build, "family=sot-mram"),
+        ("devices.content", fam.content, "family=sot-mram"),
+    )
+    for name, fn, derived in benches:
+        us = _best_of(fn) * 1e6
+        print(f"{name:34s} {us:10.1f} us  {derived}")
+        rows.append(f"{name},{us:.1f},{derived}")
+    return rows

@@ -44,6 +44,7 @@ def bench_registry() -> dict:
     from benchmarks.cachesim_bench import cachesim_bench
     from benchmarks.campaign_bench import campaign_bench
     from benchmarks.composer_bench import composer_bench
+    from benchmarks.devices_bench import devices_bench
     from benchmarks.fig5_retention import fig5_retention
     from benchmarks.kernels_bench import kernels_bench
     from benchmarks.sweep_bench import sweep_bench
@@ -53,6 +54,7 @@ def bench_registry() -> dict:
         "cachesim": cachesim_bench,
         "campaign": campaign_bench,
         "composer": composer_bench,
+        "devices": devices_bench,
         "sweep": sweep_bench,
         "table4": pt.table4_pka,
         "fig5": fig5_retention,
@@ -71,7 +73,7 @@ def main() -> None:
     ap.add_argument("--only", default=None,
                     help="table4|table6|table7|table8|table9|fig8|fig10|"
                          "kernels|pipeline|cachesim|campaign|composer|"
-                         "sweep")
+                         "devices|sweep")
     args = ap.parse_args()
 
     rows = []

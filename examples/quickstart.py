@@ -8,7 +8,13 @@ area, and derive the optimal heterogeneous memory composition.
 """
 
 from repro.backends.systolic import GemmLayer
-from repro.core import SI_GCRAM, ProfileSession
+from repro.core import ProfileSession
+from repro.devices import get_device_family
+
+# the paper device set through the family registry (object-identical to
+# the historical SRAM / SI_GCRAM / HYBRID_GCRAM constants)
+_SRAM, SI_GCRAM, _HYBRID_GCRAM = get_device_family(
+    "sram-gaincell-default").build()
 
 # 1. a workload: the GEMMs of one transformer block (BERT-base dims)
 layers = [

@@ -33,6 +33,10 @@ Subcommands:
              ``--write-baseline``, ``--update-schema-manifest``)
   workloads  list the registered workload specs (name, suite, backends)
   backends   list the registered profiling backends
+  devices    list the registered device families (name, version,
+             aliases, parameter schema) — the specs behind ``sweep``/
+             ``campaign`` ``--family``; stdlib-only, never loads a
+             backend
 
 Examples::
 
@@ -53,6 +57,9 @@ Examples::
   PYTHONPATH=src python -m repro check --format json
   PYTHONPATH=src python -m repro workloads
   PYTHONPATH=src python -m repro backends
+  PYTHONPATH=src python -m repro devices
+  PYTHONPATH=src python -m repro sweep --backend systolic --dry-run \
+      --family sot-mram --family-param delta=40,60,80
 """
 
 from __future__ import annotations
@@ -100,6 +107,20 @@ def main(argv=None) -> int:
             doc = (b.__doc__ or "").strip().splitlines()
             print(f"{name:12s} mode={b.mode:10s} "
                   f"{doc[0] if doc else ''}")
+        return 0
+    if cmd == "devices":
+        from repro.devices import (available_device_families,
+                                   get_device_family)
+        for name in available_device_families():
+            fam = get_device_family(name)
+            print(fam.describe())
+            print(f"    {fam.description}")
+            for p in fam.params:
+                default = (":".join(f"{v:g}" for v in p.default)
+                           if isinstance(p.default, tuple)
+                           else f"{p.default:g}")
+                print(f"    --family-param {p.name}=... "
+                      f"(default {default})  {p.doc}")
         return 0
     print(f"unknown command {cmd!r}\n\n{_USAGE}", file=sys.stderr)
     return 2

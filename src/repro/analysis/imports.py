@@ -45,6 +45,7 @@ class ImportContract:
 #: specs without jax), so only jax is banned there.
 DEFAULT_CONTRACTS = (
     ImportContract("repro.workloads", ("jax", "numpy"), recursive=True),
+    ImportContract("repro.devices", ("jax", "numpy"), recursive=True),
     ImportContract("repro.cluster", ("jax", "numpy"), recursive=True),
     ImportContract("repro.analysis", ("jax", "numpy"), recursive=True),
     ImportContract("repro.launch.campaign", ("jax", "numpy")),

@@ -4,8 +4,9 @@ Both registries only validate at *import/registration time* — a
 duplicate name silently wins, an alias that shadows a real name
 silently redirects, and a builder with the wrong arity explodes only
 when a campaign finally lowers it on a backend.  With the
-device-family registry (ROADMAP) about to join, this rule checks every
-``@register_workload`` / ``@register_backend`` site statically:
+device-family registry now joined (``repro.devices``), this rule checks
+every ``@register_workload`` / ``@register_backend`` /
+``@register_device_family`` site statically:
 
   * literal names must be unique across the tree; aliases must not
     collide with names or other aliases (per registry namespace);
@@ -15,6 +16,9 @@ device-family registry (ROADMAP) about to join, this rule checks every
   * a literal ``backends=()`` registration is unreachable in campaigns;
   * a backend class must define ``run`` and a ``mode`` attribute, and a
     ``name`` attribute when the decorator passes no literal name;
+  * a device-family builder takes ``(params)`` — exactly one required
+    positional — and family names/aliases share one lookup namespace
+    (``get_device_family`` resolves aliases first);
   * the workload-side ``_BACKEND_ALIASES`` literal in
     ``workloads/spec.py`` (kept local so planning stays jax-free) must
     mirror the aliases the backend decorators actually declare — the
@@ -75,8 +79,9 @@ def _required_positionals(fn: ast.FunctionDef) -> int:
 
 class RegistryConformanceRule:
     id = RULE_ID
-    description = ("@register_workload/@register_backend sites: required "
-                   "shape, unique names, consistent alias maps")
+    description = ("@register_workload/@register_backend/"
+                   "@register_device_family sites: required shape, "
+                   "unique names, consistent alias maps")
 
     # ------------------------------------------------------------------
     def _check_workload_site(self, ctx, path, node, call, seen,
@@ -203,6 +208,58 @@ class RegistryConformanceRule:
                     remediation="declare mode as a class attribute"))
 
     # ------------------------------------------------------------------
+    def _check_device_family_site(self, ctx, path, node, call, seen,
+                                  findings) -> None:
+        rel, line = ctx.rel(path), call.lineno
+        name = _literal_str(call.args[0]) if call.args else None
+        if call.args and name is None and not isinstance(
+                call.args[0], ast.Name):
+            findings.append(Finding(
+                rule=self.id, path=rel, line=line,
+                message="register_device_family name is neither a "
+                        "string literal nor a variable",
+                remediation="pass the family name as a string literal "
+                            "(or a loop variable in a factory helper)"))
+        if name is not None:
+            prev = (seen["device_families"].get(name)
+                    or seen["device_family_aliases"].get(name))
+            if prev:
+                findings.append(Finding(
+                    rule=self.id, path=rel, line=line,
+                    message=(f"duplicate device-family registration "
+                             f"{name!r} (first registered at {prev})"),
+                    remediation="family names and aliases share one "
+                                "lookup namespace and must be unique; "
+                                "register_device_family raises at "
+                                "import, so this site is dead code"))
+            else:
+                seen["device_families"][name] = f"{rel}:{line}"
+        for alias in _literal_str_seq(_kwarg(call, "aliases")) or []:
+            prev = (seen["device_family_aliases"].get(alias)
+                    or seen["device_families"].get(alias))
+            if prev:
+                findings.append(Finding(
+                    rule=self.id, path=rel, line=line,
+                    message=(f"device-family alias {alias!r} collides "
+                             "with an existing family name or alias"),
+                    remediation="aliases share the lookup namespace "
+                                "with names; pick a distinct alias"))
+            else:
+                seen["device_family_aliases"][alias] = f"{rel}:{line}"
+        if isinstance(node, ast.FunctionDef):
+            req = _required_positionals(node)
+            if req != 1:
+                findings.append(Finding(
+                    rule=self.id, path=rel, line=node.lineno,
+                    message=(f"device-family builder {node.name!r} "
+                             f"takes {req} required positional "
+                             "parameter(s); the registry calls "
+                             "builder(params)"),
+                    remediation="use exactly (params); extra closure "
+                                "captures need defaults, e.g. "
+                                "(params, _base=base)"))
+
+    # ------------------------------------------------------------------
     def _check_alias_map(self, ctx, seen, findings) -> None:
         """workloads/spec.py `_BACKEND_ALIASES` literal vs the aliases
         the backend decorators declare."""
@@ -252,7 +309,8 @@ class RegistryConformanceRule:
     def run(self, ctx) -> list:
         findings: list = []
         seen = {"workloads": {}, "workload_aliases": {},
-                "backends": {}, "backend_aliases": {}}
+                "backends": {}, "backend_aliases": {},
+                "device_families": {}, "device_family_aliases": {}}
         any_backend_sites = False
         for path in ctx.files():
             tree = ctx.ast_of(path)
@@ -268,6 +326,10 @@ class RegistryConformanceRule:
                     any_backend_sites = True
                     self._check_backend_site(ctx, path, node, call,
                                              seen, findings)
+                for call in _decorator_calls(
+                        node, "register_device_family"):
+                    self._check_device_family_site(ctx, path, node,
+                                                   call, seen, findings)
         if any_backend_sites:
             self._check_alias_map(ctx, seen, findings)
         return findings

@@ -56,6 +56,8 @@ def runner_from_manifest(manifest: dict, store_dir: str):
         backend_cfg=manifest.get("backend_cfg") or None,
         retention_bins=manifest["retention_bins"],
         sweep_axes=manifest.get("sweep_axes"),
+        family=manifest.get("family"),
+        family_axes=manifest.get("family_axes"),
         devices=manifest.get("devices"),
         policy=manifest.get("policy", "refresh-free"))
 

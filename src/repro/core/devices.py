@@ -12,6 +12,18 @@ are scaled so the paper's headline *ratios* reproduce exactly:
 
 Refresh semantics (Algorithm 1): one refresh = one read + one write of the
 bit.  A device with infinite retention never refreshes.
+
+Per-operation accounting: reads bill ``read_fj_per_bit``, writes bill
+``write_fj_per_bit``, and a refresh bills both — nothing in the stack
+collapses them into a single per-access energy (asymmetric families
+like SOT-MRAM depend on it).  :meth:`DeviceModel.op_energy_fj` is the
+canonical billing expression.
+
+``DEFAULT_DEVICES`` is a lazy re-export built by the device-family
+registry (``repro.devices.get_device_family("sram-gaincell-default")``)
+— object-for-object the historical ``(SRAM, SI_GCRAM, HYBRID_GCRAM)``
+tuple, kept for backward compatibility; new code should resolve device
+sets through the registry.
 """
 
 from __future__ import annotations
@@ -56,6 +68,18 @@ class DeviceModel:
     def refresh_energy_fj_per_bit(self) -> float:
         return self.read_fj_per_bit + self.write_fj_per_bit
 
+    def op_energy_fj(self, read_bits: float, write_bits: float,
+                     refresh_bits: float = 0.0) -> float:
+        """Per-operation billing: ``E_r*(N_r + R) + E_w*(N_w + R)``.
+
+        Reads and writes bill their own energies; one refresh = one
+        read + one write of the bit (Algorithm 1).  Every energy path
+        in the stack reduces to this expression — read and write costs
+        are never collapsed into a single per-access number.
+        """
+        return (self.read_fj_per_bit * (read_bits + refresh_bits)
+                + self.write_fj_per_bit * (write_bits + refresh_bits))
+
 
 SRAM = DeviceModel(
     name="SRAM",
@@ -82,11 +106,32 @@ HYBRID_GCRAM = DeviceModel(
     retention_knee_hz=1.0e7,
 )
 
-DEFAULT_DEVICES = (SRAM, SI_GCRAM, HYBRID_GCRAM)
+_DEFAULT_DEVICES_CACHE: tuple | None = None
+
+
+def _default_devices() -> tuple:
+    """The paper device set, routed through the family registry.  The
+    ``sram-gaincell-default`` build returns the exact module-level
+    objects above, so the lazy re-export is bit-for-bit the historical
+    literal tuple (``tests/test_devices.py`` locks identity)."""
+    global _DEFAULT_DEVICES_CACHE
+    if _DEFAULT_DEVICES_CACHE is None:
+        from repro.devices import get_device_family
+        _DEFAULT_DEVICES_CACHE = get_device_family(
+            "sram-gaincell-default").build()
+    return _DEFAULT_DEVICES_CACHE
+
+
+def __getattr__(name: str):
+    # lazy back-compat re-export (see module docstring)
+    if name == "DEFAULT_DEVICES":
+        return _default_devices()
+    raise AttributeError(
+        f"module {__name__!r} has no attribute {name!r}")
 
 
 def device_by_name(name: str) -> DeviceModel:
-    for d in DEFAULT_DEVICES:
+    for d in _default_devices():
         if d.name.lower() == name.lower():
             return d
     raise KeyError(name)

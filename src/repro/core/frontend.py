@@ -129,8 +129,7 @@ def analyze_energy(
     refresh = analyze_refresh(stats, device)
     read_bits = stats.n_reads * stats.block_bits
     write_bits = stats.n_writes * stats.block_bits
-    e_fj = (device.read_fj_per_bit * (read_bits + refresh)
-            + device.write_fj_per_bit * (write_bits + refresh))
+    e_fj = device.op_energy_fj(read_bits, write_bits, refresh)
     return e_fj * 1e-15, refresh
 
 

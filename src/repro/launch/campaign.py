@@ -41,7 +41,8 @@ Two schedulers share the same plan, cache keys, and artifacts:
 
 Import contract: planning (``--dry-run``, ``--status``, cache-key
 computation) uses only ``repro.workloads`` + ``repro.compose.policies``
-(numpy + stdlib, for policy-spec validation) + ``repro.cluster`` /
+(numpy + stdlib, for policy-spec validation) + ``repro.devices``
+(stdlib, for family-axis validation) + ``repro.cluster`` /
 ``repro.runtime`` (stdlib) + stdlib; backends/JAX load only when jobs
 actually execute.
 """
@@ -65,7 +66,7 @@ from repro.workloads import (canonical_backend, get_workload,
 
 SCHEDULERS = ("thread", "process")
 
-SCHEMA_VERSION = 2    # v2: assignment policy in the cache key + artifact
+SCHEMA_VERSION = 3    # v3: device family (name/version/axes) in the key
 
 # Default retention bins: Si-GCRAM (1 us) and Hybrid-GCRAM (10 us) —
 # repro.core.devices values, kept literal so planning stays jax-free.
@@ -107,6 +108,7 @@ class _AggPoint:
     energy_vs_sram: float
     n_workloads: int
     policy: str = "refresh-free"
+    family: str | None = None
 
     def asdict(self) -> dict:
         return dataclasses.asdict(self)
@@ -175,6 +177,13 @@ class CampaignRunner:
     sweep_axes : DeviceGrid axes for the per-job composition sweep
         (``mixes`` / ``retention_scales`` / ``area_scales`` /
         ``energy_scales`` / ``per_mix``), or ``None`` to skip sweeps.
+        Ignored when ``family`` is set.
+    family : registered device-family name/alias (``repro.devices``);
+        swaps the gain-cell ``DeviceGrid`` for a ``FamilyGrid`` in the
+        per-job sweep.  The family's name, version, and resolved axes
+        are cache-key components.
+    family_axes : ``{param: (axis values...)}`` for the family sweep;
+        ``None`` uses the family's registered ``default_axes``.
     devices : device set for analyze/compose (names or DeviceModels);
         names only are recorded in the cache key.
     policy : assignment-policy spec for compose() and the per-job
@@ -202,6 +211,8 @@ class CampaignRunner:
                  backend_cfg: Mapping[str, Mapping] | None = None,
                  retention_bins: Sequence[float] = DEFAULT_RETENTION_BINS,
                  sweep_axes: Mapping | None = DEFAULT_SWEEP_AXES,
+                 family: str | None = None,
+                 family_axes: Mapping | None = None,
                  devices: Sequence[str] | None = None,
                  policy: str = "refresh-free",
                  scheduler: str = "thread",
@@ -224,6 +235,27 @@ class CampaignRunner:
         if not self.retention_bins:
             raise ValueError("retention_bins must be non-empty")
         self.sweep_axes = dict(sweep_axes) if sweep_axes else None
+        self.family = None
+        self.family_axes = None
+        self._family_version = None
+        if family is not None:
+            from repro.devices import get_device_family
+            fam = get_device_family(family)     # validates; stdlib-only
+            self.family = fam.name
+            self._family_version = fam.version
+            raw = (family_axes if family_axes is not None
+                   else fam.default_axes)
+            axes = {}
+            for k, vals in raw.items():
+                p = fam.param_dict.get(k)
+                if p is None:
+                    raise ValueError(
+                        f"device family {fam.name!r} has no parameter "
+                        f"{k!r}; available: {sorted(fam.param_dict)}")
+                axes[k] = tuple(p.coerce(v) for v in vals)
+            self.family_axes = axes
+        elif family_axes:
+            raise ValueError("family_axes requires family")
         self.devices = tuple(devices) if devices is not None else None
         if scheduler not in SCHEDULERS:
             raise ValueError(f"scheduler must be one of {SCHEDULERS}, "
@@ -252,6 +284,10 @@ class CampaignRunner:
             "devices": list(self.devices) if self.devices else None,
             "retention_bins": list(self.retention_bins),
             "sweep": self.sweep_axes,
+            "family": ({"name": self.family,
+                        "version": self._family_version,
+                        "axes": self.family_axes}
+                       if self.family else None),
             "policy": self.policy,
         }
         return hashlib.sha256(
@@ -309,15 +345,20 @@ class CampaignRunner:
                 for b in self.retention_bins}
 
         sweep_points: list = []
-        if self.sweep_axes:
-            from repro.sweep import DeviceGrid
-            grid = DeviceGrid(**self.sweep_axes)
+        if self.family or self.sweep_axes:
+            if self.family:
+                from repro.sweep import FamilyGrid
+                grid = FamilyGrid(self.family, axes=self.family_axes)
+            else:
+                from repro.sweep import DeviceGrid
+                grid = DeviceGrid(**self.sweep_axes)
             result = session.sweep(grid, attach=False,
                                    policy=self.policy)
             sweep_points = [
                 {"candidate": p.candidate,
                  "subpartition": p.subpartition,
                  "policy": p.policy,
+                 "family": p.family,
                  "area_vs_sram": float(p.area_vs_sram),
                  "energy_vs_sram": float(p.energy_vs_sram)}
                 for p in result.points]
@@ -416,6 +457,8 @@ class CampaignRunner:
                 "backend_cfg": self.backend_cfg,
                 "retention_bins": list(self.retention_bins),
                 "sweep_axes": self.sweep_axes,
+                "family": self.family,
+                "family_axes": self.family_axes,
                 "devices": list(self.devices) if self.devices else None,
                 "policy": self.policy,
                 "lease_ttl_s": self.lease_ttl_s,
@@ -586,6 +629,7 @@ class CampaignRunner:
             "workloads": list(self.workloads),
             "backends": list(self.backends),
             "policy": self.policy,
+            "family": self.family,
             "scheduler": self.scheduler,
             "retention_bins_s": list(self.retention_bins),
             "n_jobs": len(jobs),
@@ -615,10 +659,11 @@ class CampaignRunner:
         """Per-(backend, subpartition) Pareto frontiers of the
         access-weighted mean sweep points across the whole campaign —
         the PR-3 engine's reduction reused at suite level."""
-        if not self.sweep_axes:
+        if not (self.sweep_axes or self.family):
             return {}
         # (backend, sub, candidate) -> [w_area, w_energy, weight, n]
         cells: dict = {}
+        families: dict = {}
         for art in artifacts:
             if art is None:
                 continue
@@ -634,12 +679,14 @@ class CampaignRunner:
                 c[1] += energy * w
                 c[2] += w
                 c[3] += 1
+                families.setdefault(k, p.get("family"))
         groups: dict = {}
         for (backend, sub, cand), (wa, we, w, n) in cells.items():
             groups.setdefault((backend, sub), []).append(_AggPoint(
                 candidate=cand, subpartition=sub,
                 area_vs_sram=wa / w, energy_vs_sram=we / w,
-                n_workloads=n, policy=self.policy))
+                n_workloads=n, policy=self.policy,
+                family=families.get((backend, sub, cand))))
         if not groups:
             return {}
         from repro.sweep.pareto import pareto_frontier
@@ -746,6 +793,15 @@ def main(argv=None):
     ap.add_argument("--no-sweep", action="store_true",
                     help="skip the per-job composition sweep (no suite "
                          "frontiers)")
+    ap.add_argument("--family", default=None,
+                    help="sweep a registered device family instead of "
+                         "the gain-cell grid (see `python -m repro "
+                         "devices`); family name/version/axes enter the "
+                         "trace-cache key")
+    ap.add_argument("--family-param", action="append", default=None,
+                    metavar="K=V1,V2",
+                    help="family parameter axis (repeatable); defaults "
+                         "to the family's registered axes")
     ap.add_argument("--policy", default="refresh-free",
                     help="assignment policy for compose() and the "
                          "per-job sweep: refresh-free | refresh-aware | "
@@ -764,24 +820,37 @@ def main(argv=None):
         print_status(args.status)
         return None
 
-    sweep_axes = None if args.no_sweep else {
+    sweep_axes = None if (args.no_sweep or args.family) else {
         "mixes": _floats(args.mixes),
         "retention_scales": _floats(args.retention_scales),
         "per_mix": False,
     }
+    family_axes = None
+    if args.family:
+        if args.no_sweep:
+            raise SystemExit("--family conflicts with --no-sweep")
+        if args.family_param:
+            from repro.devices import (get_device_family,
+                                       parse_family_params)
+            family_axes = parse_family_params(
+                args.family_param, get_device_family(args.family))
+    elif args.family_param:
+        raise SystemExit("--family-param requires --family")
     runner = CampaignRunner(
         args.workloads, args.backends, jobs=args.jobs,
         cache_dir=args.cache_dir or None, seq=args.seq,
         backend_cfg={"systolic": {"rows": args.pe, "cols": args.pe,
                                   "dataflow": args.dataflow}},
         retention_bins=_floats(args.retention_bins),
-        sweep_axes=sweep_axes, policy=args.policy,
+        sweep_axes=sweep_axes, family=args.family,
+        family_axes=family_axes, policy=args.policy,
         scheduler=args.scheduler, lease_ttl_s=args.lease_ttl,
         max_retries=args.max_retries)
 
     jobs = runner.plan()
     if args.dry_run:
-        print(f"campaign plan: policy={runner.policy} "
+        fam_tag = f" family={runner.family}" if runner.family else ""
+        print(f"campaign plan: policy={runner.policy}{fam_tag} "
               f"scheduler={runner.scheduler}")
         print(f"{'workload':22s} {'backend':10s} {'cache key':14s} "
               f"{'state'}")

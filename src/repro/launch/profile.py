@@ -28,9 +28,16 @@ import argparse
 import json
 
 from repro.backends.systolic import GemmLayer
-from repro.core import HYBRID_GCRAM, SI_GCRAM, ProfileSession
+from repro.core import ProfileSession
+from repro.devices import get_device_family
 from repro.workloads import (get_workload, transformer_gemms,  # noqa: F401
                              transformer_program, tpu_step_workload)
+
+# The paper device set, resolved through the device-family registry
+# (importing the DEFAULT_DEVICES / SI_GCRAM / HYBRID_GCRAM literals is
+# deprecated for launchers; the family build is object-identical).
+_SRAM_DEV, SI_GCRAM, HYBRID_GCRAM = get_device_family(
+    "sram-gaincell-default").build()
 
 
 def _op_program(cfg, seq):

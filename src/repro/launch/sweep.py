@@ -11,6 +11,13 @@ per-subpartition Pareto frontiers (console + optional JSON/CSV).
       --retention-scales 0.5,1,2,4 --out sweep.json --csv sweep.csv
   PYTHONPATH=src python -m repro sweep --backend gpu --seq 64 \
       --l1-geom 64:4,128:8 --workers 4
+  PYTHONPATH=src python -m repro sweep --backend systolic --dry-run \
+      --family sot-mram --family-param delta=40,60,80
+
+``--family`` swaps the gain-cell ``DeviceGrid`` for a ``FamilyGrid``
+over a registered device family (``python -m repro devices`` lists
+them); ``--family-param k=v1,v2`` sets its parameter axes (``:``
+separates floats inside one list-valued point, e.g. ``mixes=0:1``).
 """
 
 from __future__ import annotations
@@ -20,10 +27,21 @@ import json
 
 from repro.core import ProfileSession
 from repro.launch import parse_floats as _floats
-from repro.sweep import DeviceGrid, SweepRunner
+from repro.sweep import DeviceGrid, FamilyGrid, SweepRunner
 
 
-def _grid_from_args(args) -> DeviceGrid:
+def _grid_from_args(args):
+    if args.family:
+        from repro.devices import get_device_family, parse_family_params
+        fam = get_device_family(args.family)
+        axes = parse_family_params(args.family_param or (), fam)
+        return FamilyGrid(
+            family=fam.name,
+            axes=axes if args.family_param else None,
+            include_sram_only=not args.no_sram_anchor,
+        )
+    if args.family_param:
+        raise SystemExit("--family-param requires --family")
     return DeviceGrid(
         mixes=_floats(args.mixes),
         retention_scales=_floats(args.retention_scales),
@@ -95,6 +113,13 @@ def main(argv=None):
                          "combined device set per scale point")
     ap.add_argument("--no-sram-anchor", action="store_true",
                     help="drop the all-SRAM anchor candidate")
+    ap.add_argument("--family", default=None,
+                    help="sweep a registered device family instead of the "
+                         "gain-cell grid (see `python -m repro devices`)")
+    ap.add_argument("--family-param", action="append", default=None,
+                    metavar="K=V1,V2",
+                    help="family parameter axis (repeatable); ':' joins "
+                         "floats inside one list-valued point")
     ap.add_argument("--l1-geom", default=None,
                     help="cache geometries to sweep, size_kb:ways pairs "
                          "(gpu/cachesim backends), e.g. 64:4,128:8")
@@ -113,8 +138,10 @@ def main(argv=None):
     runner = SweepRunner(grid, workers=args.workers, policy=args.policy)
     workload, cfg = _workload(args)
     geoms = _geometries(args)
-    print(f"sweep: backend={args.backend} grid={len(grid)} candidates "
-          f"(policy={runner.policy.name}, workers={args.workers})")
+    fam_tag = f" family={grid.family}" if args.family else ""
+    print(f"sweep: backend={args.backend} grid={len(grid)} candidates"
+          f"{fam_tag} (policy={runner.policy.name}, "
+          f"workers={args.workers})")
 
     if geoms:
         if args.backend not in ("gpu", "cachesim"):

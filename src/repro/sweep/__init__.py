@@ -5,7 +5,9 @@ up to 3x active energy and 4x area reductions") is an optimum over a
 device design space.  This package explores that space:
 
   grid     - ``DeviceGrid``: candidate device sets from retention / area /
-             energy scaling axes + parametric Si<->Hybrid interpolation
+             energy scaling axes + parametric Si<->Hybrid interpolation;
+             ``FamilyGrid``: a registered device family (``repro.devices``)
+             swept over its parameter axes (technology x composition)
   runner   - ``SweepRunner``: the shared ``repro.compose`` engine over
              grid x subpartitions x cache geometries (one batched policy
              kernel per subpartition, ``policy=`` selectable,
@@ -17,13 +19,13 @@ Front doors: ``ProfileSession.sweep(...)`` and ``python -m repro sweep``.
 """
 
 from repro.sweep.grid import (SRAM_ONLY_ID, Candidate, DeviceGrid,
-                              gain_cell)
+                              FamilyGrid, gain_cell)
 from repro.sweep.pareto import ParetoFrontier, dominates, pareto_frontier
 from repro.sweep.runner import (SweepPoint, SweepResult, SweepRunner,
                                 evaluate_candidates)
 
 __all__ = [
-    "SRAM_ONLY_ID", "Candidate", "DeviceGrid", "gain_cell",
+    "SRAM_ONLY_ID", "Candidate", "DeviceGrid", "FamilyGrid", "gain_cell",
     "ParetoFrontier", "dominates", "pareto_frontier",
     "SweepPoint", "SweepResult", "SweepRunner", "evaluate_candidates",
 ]

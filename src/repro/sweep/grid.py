@@ -36,17 +36,12 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
-import math
-from typing import Iterator, Sequence
+from typing import Iterator, Mapping, Sequence
 
-from repro.core.devices import HYBRID_GCRAM, SI_GCRAM, SRAM, DeviceModel
+from repro.core.devices import SRAM, DeviceModel
+from repro.devices.families import gain_cell_model
 
 SRAM_ONLY_ID = "sram-only"
-
-
-def _geo(a: float, b: float, t: float) -> float:
-    """Geometric interpolation a^(1-t) * b^t (log-linear)."""
-    return a ** (1.0 - t) * b ** t
 
 
 def gain_cell(
@@ -57,41 +52,18 @@ def gain_cell(
 ) -> DeviceModel:
     """A parametric gain-cell device on the Si <-> Hybrid continuum.
 
-    ``mix=0`` with unit scales returns ``SI_GCRAM`` itself and ``mix=1``
-    returns ``HYBRID_GCRAM`` (exact objects, so degenerate grids reproduce
-    the paper's fixed device set bit-for-bit).  Interior mixes
-    interpolate area, access energy, and retention geometrically; the
+    Compatibility wrapper over the ``gaincell`` device family's cell
+    model (:func:`repro.devices.families.gain_cell_model`): ``mix=0``
+    with unit scales returns ``SI_GCRAM`` itself and ``mix=1`` returns
+    ``HYBRID_GCRAM`` (exact objects, so degenerate grids reproduce the
+    paper's fixed device set bit-for-bit).  Interior mixes interpolate
+    area, access energy, and retention geometrically; the
     write-frequency knee interpolates in ``1/knee`` space (Si has no
     knee, so ``mix -> 0`` pushes the knee to infinity).
     """
-    if not 0.0 <= mix <= 1.0:
-        raise ValueError(f"mix must be in [0, 1], got {mix}")
-    scales = (retention_scale, area_scale, energy_scale)
-    if any(s <= 0 for s in scales):
-        raise ValueError(f"scales must be positive, got {scales}")
-    if scales == (1.0, 1.0, 1.0):
-        if mix == 0.0:
-            return SI_GCRAM
-        if mix == 1.0:
-            return HYBRID_GCRAM
-    si, hy = SI_GCRAM, HYBRID_GCRAM
-    knee_hz = math.inf if mix == 0.0 else hy.retention_knee_hz / mix
-    return DeviceModel(
-        name=_gc_name(mix, retention_scale, area_scale, energy_scale),
-        area_um2_per_bit=_geo(si.area_um2_per_bit, hy.area_um2_per_bit,
-                              mix) * area_scale,
-        read_fj_per_bit=_geo(si.read_fj_per_bit, hy.read_fj_per_bit,
-                             mix) * energy_scale,
-        write_fj_per_bit=_geo(si.write_fj_per_bit, hy.write_fj_per_bit,
-                              mix) * energy_scale,
-        retention_s=_geo(si.retention_s, hy.retention_s,
-                         mix) * retention_scale,
-        retention_knee_hz=knee_hz,
-    )
-
-
-def _gc_name(mix, r, a, e) -> str:
-    return f"GC[m={mix:g},r={r:g},a={a:g},e={e:g}]"
+    return gain_cell_model(mix, retention_scale=retention_scale,
+                           area_scale=area_scale,
+                           energy_scale=energy_scale)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -165,3 +137,81 @@ class DeviceGrid:
     def default_point(cls) -> "DeviceGrid":
         """The degenerate 1-point grid: exactly ``DEFAULT_DEVICES``."""
         return cls(include_sram_only=False)
+
+
+@dataclasses.dataclass(frozen=True)
+class FamilyGrid:
+    """Family-backed candidate source: a registered device family swept
+    over parameter axes (``axes``: param -> tuple of values, each value
+    one axis point; list-valued params like the gaincell ``mixes`` take
+    tuples as points).
+
+    ``axes=None`` uses the family's registered ``default_axes``;
+    ``axes={}`` pins every parameter at its default (one candidate).
+    Candidates enumerate the cartesian product in the family's declared
+    parameter order, so sweeps over technology x composition are
+    deterministic.  Duck-types ``DeviceGrid`` for ``SweepRunner`` /
+    ``ProfileSession.sweep`` / the CLI.
+    """
+    family: str
+    axes: Mapping | None = None
+    include_sram_only: bool = True
+
+    def __post_init__(self):
+        from repro.devices import get_device_family
+        fam = get_device_family(self.family)      # validates the name
+        object.__setattr__(self, "family", fam.name)
+        raw = fam.default_axes if self.axes is None else self.axes
+        axes = {}
+        for key in (p.name for p in fam.params):  # declaration order
+            if key not in raw:
+                continue
+            vals = tuple(fam.param_dict[key].coerce(v)
+                         for v in raw[key])
+            if not vals:
+                raise ValueError(f"FamilyGrid axis {key!r} is empty")
+            axes[key] = vals
+        unknown = sorted(set(raw) - set(axes))
+        if unknown:
+            raise ValueError(
+                f"device family {fam.name!r} has no parameter(s) "
+                f"{unknown}; available: {sorted(fam.param_dict)}")
+        object.__setattr__(self, "axes", axes)
+
+    def _family(self):
+        from repro.devices import get_device_family
+        return get_device_family(self.family)
+
+    def __len__(self) -> int:
+        n = 1
+        for vals in self.axes.values():
+            n *= len(vals)
+        return n + (1 if self.include_sram_only else 0)
+
+    def __iter__(self) -> Iterator[Candidate]:
+        return iter(self.candidates())
+
+    def candidates(self) -> tuple:
+        """SRAM anchor + one candidate per family-parameter point."""
+        fam = self._family()
+        out = []
+        if self.include_sram_only:
+            out.append(Candidate(
+                cid=SRAM_ONLY_ID, devices=(SRAM,),
+                params={"sram_only": True, "family": None}))
+        keys = list(self.axes)
+        for combo in itertools.product(
+                *(self.axes[k] for k in keys)) if keys else [()]:
+            point = dict(zip(keys, combo))
+            out.append(Candidate(
+                cid=self._cid(point), devices=fam.build(**point),
+                params={"family": fam.name, **point}))
+        return tuple(out)
+
+    def _cid(self, point: Mapping) -> str:
+        def fmt(v):
+            if isinstance(v, tuple):
+                return ":".join(f"{x:g}" for x in v)
+            return f"{v:g}"
+        tag = ",".join(f"{k}={fmt(v)}" for k, v in point.items())
+        return f"{self.family}[{tag}]" if tag else f"{self.family}[]"

@@ -41,6 +41,7 @@ class SweepPoint:
     params: dict = dataclasses.field(default_factory=dict)
     geometry: str | None = None
     policy: str = "refresh-free"
+    family: str | None = None     # device family behind the candidate
 
     @property
     def area_vs_sram(self) -> float:
@@ -57,6 +58,7 @@ class SweepPoint:
             "subpartition": self.subpartition,
             "geometry": self.geometry,
             "policy": self.policy,
+            "family": self.family,
             "area_vs_sram": comp.area_vs_sram,
             "energy_vs_sram": comp.energy_vs_sram,
             "area_um2": comp.area_um2,
@@ -104,7 +106,7 @@ class SweepResult:
                 "frontiers": entry}
 
     def csv_rows(self) -> list:
-        """``geometry,subpartition,candidate,policy,area_vs_sram,
+        """``geometry,subpartition,candidate,family,policy,area_vs_sram,
         energy_vs_sram,on_frontier,capacity_fractions`` rows (header
         included; fields holding commas — candidate ids, capacity maps —
         are quoted)."""
@@ -116,9 +118,9 @@ class SweepResult:
                 on_front.add((geom, sub, p.candidate))
         buf = io.StringIO()
         w = csv.writer(buf, lineterminator="\n")
-        w.writerow(["geometry", "subpartition", "candidate", "policy",
-                    "area_vs_sram", "energy_vs_sram", "on_frontier",
-                    "capacity_fractions"])
+        w.writerow(["geometry", "subpartition", "candidate", "family",
+                    "policy", "area_vs_sram", "energy_vs_sram",
+                    "on_frontier", "capacity_fractions"])
         for p in self.points:
             caps = "|".join(
                 f"{d}:{c:.6g}" for d, c in
@@ -126,7 +128,8 @@ class SweepResult:
                     p.composition.capacity_fractions))
             front = (p.geometry, p.subpartition, p.candidate) in on_front
             w.writerow([p.geometry or "", p.subpartition, p.candidate,
-                        p.policy, f"{p.area_vs_sram:.9g}",
+                        p.family or "", p.policy,
+                        f"{p.area_vs_sram:.9g}",
                         f"{p.energy_vs_sram:.9g}", int(front), caps])
         return buf.getvalue().splitlines()
 
@@ -181,7 +184,8 @@ class SweepRunner:
         name = subpartition if subpartition is not None else stats.name
         return [SweepPoint(candidate=c.cid, subpartition=name,
                            composition=comp, params=c.params,
-                           geometry=geometry, policy=comp.policy)
+                           geometry=geometry, policy=comp.policy,
+                           family=c.params.get("family"))
                 for c, comp in zip(cands, comps)]
 
     # -- all subpartitions of an analyzed session ------------------------

@@ -53,3 +53,24 @@ class Sim:
 class SimAgain:  # and neither run() nor mode
     def configure(self):
         return None
+
+
+def register_device_family(name, **kw):
+    def deco(fn):
+        return fn
+    return deco
+
+
+@register_device_family("cell")
+def build_cell(params):
+    return params
+
+
+@register_device_family("cell")  # duplicate family name
+def build_cell_again(params):
+    return params
+
+
+@register_device_family("other", aliases=("cell",))  # alias shadows name
+def build_other(params, extra):  # 2 required positionals: builder(params)
+    return params, extra

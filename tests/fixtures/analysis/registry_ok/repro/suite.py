@@ -37,3 +37,22 @@ class Sim:
 
     def run(self, workload, **cfg):
         return workload
+
+
+def register_device_family(name, **kw):
+    def deco(fn):
+        return fn
+    return deco
+
+
+@register_device_family("cell", aliases=("gc",))
+def build_cell(params):
+    return params
+
+
+def _register_cell_variant(flavor):
+    # dynamic names skip the literal uniqueness checks by design
+    @register_device_family(flavor)
+    def _build(params, _flavor=flavor):  # closure capture: default
+        return params, _flavor
+    return _build

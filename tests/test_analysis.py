@@ -95,7 +95,7 @@ def test_dtype_rule_clean_twin():
 def test_registry_rule_flags_every_failure_mode():
     findings = RegistryConformanceRule().run(fixture_ctx("registry_bad"))
     msgs = "\n".join(f.message for f in findings)
-    assert len(findings) == 10
+    assert len(findings) == 13
     assert "duplicate workload registration 'dup'" in msgs
     assert "workload alias 'dup' collides" in msgs
     assert "registers no backends" in msgs
@@ -106,6 +106,10 @@ def test_registry_rule_flags_every_failure_mode():
     assert "no `mode` attribute" in msgs
     assert "missing/stale for alias 'fast'" in msgs
     assert "'gone'" in msgs
+    assert "duplicate device-family registration 'cell'" in msgs
+    assert "device-family alias 'cell' collides" in msgs
+    assert ("device-family builder 'build_other' takes 2 required "
+            "positional parameter(s)") in msgs
 
 
 def test_registry_rule_clean_twin_accepts_factory_idiom():

@@ -460,8 +460,8 @@ def test_session_sweep_policy_tags_points(analyzed_session):
                for p in res.points)
     import csv
     rows = res.csv_rows()
-    assert rows[0].split(",")[3] == "policy"
-    assert all(r[3] == "refresh-aware" for r in csv.reader(rows[1:]))
+    assert rows[0].split(",")[4] == "policy"
+    assert all(r[4] == "refresh-aware" for r in csv.reader(rows[1:]))
 
 
 def test_composition_csv_rows_format():
@@ -504,3 +504,82 @@ def test_campaign_policy_is_cache_key_component(tmp_path):
         assert len({base[label], aware[label], quant[label]}) == 3
     # spec strings canonicalize before hashing: aliases share a key
     assert keys("bank-quantized:refresh-free@16") == quant
+
+
+# ---------------------------------------------------------------------------
+# per-operation (asymmetric) energy accounting — the SOT-MRAM fixture
+# ---------------------------------------------------------------------------
+
+def _sot_set():
+    """(SRAM, SOT-MRAM): read 5.25 fJ/bit << write 108 fJ/bit, both
+    retention-infinite — the device class that only per-operation
+    billing can place correctly."""
+    from repro.devices import get_device_family
+    return get_device_family("sot-mram").build()
+
+
+def _skewed(reads_per_lifetime, n=2000, seed=11):
+    """Long-lived (1 ms) lifetimes with a fixed read count — skewed to
+    reads or to writes, never fitting either gain-cell retention."""
+    clock_hz = 1.0e9
+    block_bits = 256
+    lt_cycles = np.full(n, 1_000_000, np.int64)          # 1 ms each
+    reads = np.full(n, float(reads_per_lifetime))
+    dur = 1.0e-3 * n
+    return SubpartitionStats(
+        name="skew", n_reads=int(reads.sum()), n_writes=n,
+        n_unique_addrs=n, duration_s=dur,
+        write_freq_hz=n / dur, read_freq_hz=float(reads.sum()) / dur,
+        lifetimes_s=lt_cycles / clock_hz,
+        lifetime_bits=np.full(n, block_bits, np.float64),
+        accesses_per_lifetime=reads + 1.0,
+        orphan_fraction=0.0, block_bits=block_bits)
+
+
+def test_sot_mram_wins_read_heavy_bins_under_refresh_aware():
+    # SOT beats SRAM per lifetime when 108 + 5.25 r < 18 + 15 r, i.e.
+    # r > ~9.2 reads per lifetime
+    devs = _sot_set()
+    comp = compose(_skewed(reads_per_lifetime=40),
+                   devices=devs, policy="refresh-aware")
+    sot = comp.devices.index("SOT-MRAM")
+    assert comp.capacity_fractions[sot] == pytest.approx(1.0)
+    assert comp.energy_vs_sram < 1.0
+
+
+def test_sot_mram_loses_write_heavy_bins_under_refresh_aware():
+    devs = _sot_set()
+    comp = compose(_skewed(reads_per_lifetime=0),
+                   devices=devs, policy="refresh-aware")
+    assert comp.capacity_fractions[
+        comp.devices.index("SRAM")] == pytest.approx(1.0)
+    assert comp.energy_vs_sram == pytest.approx(1.0)
+
+
+def test_refresh_free_cannot_exploit_asymmetric_devices():
+    # refresh-free ranks by summed access energy (113.25 > 33 fJ), so
+    # SRAM always wins the first-fit — the asymmetric advantage exists
+    # only under per-operation-aware policies
+    devs = _sot_set()
+    comp = compose(_skewed(reads_per_lifetime=40), devices=devs)
+    assert comp.capacity_fractions[comp.devices.index("SOT-MRAM")] == 0.0
+
+
+def test_collapsed_energy_model_mis_bills_sot_mram():
+    # collapsing read/write into their mean makes SOT-MRAM look like a
+    # uniformly-worse SRAM: the true asymmetric billing strictly beats
+    # the collapsed twin on read-heavy data
+    sram, sot = _sot_set()
+    mean_fj = (sot.read_fj_per_bit + sot.write_fj_per_bit) / 2.0
+    collapsed = DeviceModel(
+        name="SOT-MRAM", area_um2_per_bit=sot.area_um2_per_bit,
+        read_fj_per_bit=mean_fj, write_fj_per_bit=mean_fj,
+        retention_s=sot.retention_s)
+    stats = _skewed(reads_per_lifetime=40)
+    true = compose(stats, devices=(sram, sot), policy="refresh-aware")
+    flat = compose(stats, devices=(sram, collapsed),
+                   policy="refresh-aware")
+    assert true.energy_j < flat.energy_j
+    # the collapsed twin never wins a datum at all
+    assert flat.capacity_fractions[
+        flat.devices.index("SRAM")] == pytest.approx(1.0)

@@ -1,0 +1,356 @@
+"""Tests for the device-family registry (``repro.devices``).
+
+The locked contracts:
+  - registry lookup/aliases/errors mirror the workload registry;
+  - ``sram-gaincell-default`` rebuilds the historical
+    ``(SRAM, SI_GCRAM, HYBRID_GCRAM)`` tuple *object-for-object* (the
+    bit-for-bit lock behind the lazy ``DEFAULT_DEVICES`` re-export);
+  - ``sot-mram`` is non-volatile at default stability with strongly
+    asymmetric per-operation energy (read << write);
+  - ``FamilyGrid`` enumerates the SRAM anchor + the family's parameter
+    product deterministically and duck-types ``DeviceGrid``;
+  - the ``--family-param`` grammar parses (and fails) as documented;
+  - the family (name, version, axes) is a campaign cache-key component;
+  - ``repro.devices`` stays stdlib-only at import;
+  - the CLIs (``devices``, ``sweep --family``, ``campaign --family``)
+    run end-to-end.
+"""
+
+import math
+import subprocess
+import sys
+
+import pytest
+
+from repro.devices import (DeviceFamily, FamilyParam,
+                           available_device_families, get_device_family,
+                           parse_family_params, register_device_family)
+from repro.devices.registry import _ALIASES, _FAMILIES
+
+
+# ---------------------------------------------------------------------------
+# registry behavior
+# ---------------------------------------------------------------------------
+
+def test_builtin_families_registered():
+    assert set(available_device_families()) >= {"sram", "gaincell",
+                                                "sot-mram"}
+
+
+def test_alias_resolution():
+    fam = get_device_family("gaincell")
+    assert get_device_family("opengcram") is fam
+    assert get_device_family("sram-gaincell-default") is fam
+
+
+def test_unknown_family_error_lists_registered():
+    with pytest.raises(ValueError, match="unknown device family 'nope'"):
+        get_device_family("nope")
+    with pytest.raises(ValueError, match="gaincell"):
+        get_device_family("nope")
+
+
+def test_unknown_param_rejected():
+    fam = get_device_family("sot-mram")
+    with pytest.raises(ValueError, match="has no parameter 'volts'"):
+        fam.build(volts=1.0)
+
+
+def test_duplicate_and_alias_collision_raise():
+    name = "test-throwaway-family"
+    try:
+        @register_device_family(name)
+        def _build(params):
+            from repro.core.devices import SRAM
+            return (SRAM,)
+
+        with pytest.raises(ValueError, match="already registered"):
+            register_device_family(name)(_build)
+        with pytest.raises(ValueError, match="collides"):
+            register_device_family("test-throwaway-2",
+                                   aliases=(name,))(_build)
+    finally:
+        _FAMILIES.pop(name, None)
+        _FAMILIES.pop("test-throwaway-2", None)
+        _ALIASES.pop(name, None)
+
+
+def test_builder_without_sram_anchor_rejected():
+    fam = DeviceFamily(name="anchorless", builder=lambda params: ())
+    with pytest.raises(ValueError, match="without the SRAM anchor"):
+        fam.build()
+
+
+def test_family_content_is_json_able_cache_identity():
+    import json
+    fam = get_device_family("gaincell")
+    content = fam.content({"mixes": "0:0.5"})
+    assert content["name"] == "gaincell"
+    assert content["version"] == fam.version
+    assert content["params"]["mixes"] == [0.0, 0.5]
+    json.dumps(content)
+
+
+# ---------------------------------------------------------------------------
+# the bit-for-bit lock: default family build == the historical constants
+# ---------------------------------------------------------------------------
+
+def test_default_family_build_is_object_identical():
+    from repro.core.devices import HYBRID_GCRAM, SI_GCRAM, SRAM
+    built = get_device_family("sram-gaincell-default").build()
+    assert built == (SRAM, SI_GCRAM, HYBRID_GCRAM)
+    assert built[0] is SRAM
+    assert built[1] is SI_GCRAM
+    assert built[2] is HYBRID_GCRAM
+
+
+def test_default_devices_lazy_reexport():
+    import repro.core.devices as m
+    assert tuple(m.DEFAULT_DEVICES) == \
+        get_device_family("sram-gaincell-default").build()
+    from repro.core import DEFAULT_DEVICES
+    assert tuple(DEFAULT_DEVICES) == tuple(m.DEFAULT_DEVICES)
+    with pytest.raises(AttributeError):
+        m.NO_SUCH_NAME
+
+
+# ---------------------------------------------------------------------------
+# the families themselves
+# ---------------------------------------------------------------------------
+
+def test_sram_family_identity_and_scaling():
+    from repro.core.devices import SRAM
+    fam = get_device_family("sram")
+    assert fam.build() == (SRAM,)
+    assert fam.build()[0] is SRAM
+    (scaled,) = fam.build(area_scale=2.0, energy_scale=0.5)
+    assert scaled.name == "SRAM"
+    assert scaled.area_um2_per_bit == pytest.approx(
+        2.0 * SRAM.area_um2_per_bit)
+    assert scaled.read_fj_per_bit == pytest.approx(
+        0.5 * SRAM.read_fj_per_bit)
+    assert math.isinf(scaled.retention_s)
+    with pytest.raises(ValueError, match="positive"):
+        fam.build(area_scale=0.0)
+
+
+def test_gaincell_interior_mix_interpolates():
+    from repro.core.devices import HYBRID_GCRAM, SI_GCRAM
+    from repro.devices.families import gain_cell_model
+    mid = gain_cell_model(0.5)
+    lo = min(SI_GCRAM.read_fj_per_bit, HYBRID_GCRAM.read_fj_per_bit)
+    hi = max(SI_GCRAM.read_fj_per_bit, HYBRID_GCRAM.read_fj_per_bit)
+    assert lo < mid.read_fj_per_bit < hi
+    assert SI_GCRAM.retention_s < mid.retention_s < HYBRID_GCRAM.retention_s
+    # Si has no knee; interior mixes pull the knee in from infinity
+    assert mid.retention_knee_hz == HYBRID_GCRAM.retention_knee_hz / 0.5
+    with pytest.raises(ValueError, match="mix"):
+        gain_cell_model(1.5)
+    periph = gain_cell_model(0.5, periphery_area_frac=0.2,
+                             periphery_energy_frac=0.1)
+    assert periph.area_um2_per_bit == pytest.approx(
+        1.2 * mid.area_um2_per_bit)
+    assert periph.read_fj_per_bit == pytest.approx(
+        1.1 * mid.read_fj_per_bit)
+
+
+def test_sot_mram_is_asymmetric_and_nonvolatile():
+    from repro.core.devices import SRAM
+    fam = get_device_family("sot-mram")
+    sram, dev = fam.build()
+    assert sram is SRAM
+    assert dev.name == "SOT-MRAM"
+    # cheap resistive read, expensive write pulse: the asymmetry the
+    # per-operation billing seam exists for
+    assert dev.read_fj_per_bit == pytest.approx(0.35 * 15.0)
+    assert dev.write_fj_per_bit == pytest.approx(6.0 * 18.0)
+    assert dev.read_fj_per_bit < SRAM.read_fj_per_bit
+    assert dev.write_fj_per_bit > SRAM.write_fj_per_bit
+    # delta=60 default: thermal-activation retention of ~3.6 Gyr —
+    # non-volatile on any trace timescale (no write-frequency knee)
+    assert dev.retention_s == pytest.approx(1e-9 * math.exp(60.0))
+    assert dev.retention_s > 1e9
+    assert dev.retention_at(1e9) == dev.retention_s
+    # at/above the overflow guard the model reports exactly inf
+    _, frozen = fam.build(delta=250.0)
+    assert math.isinf(frozen.retention_s)
+    # lower stability: finite thermal-activation retention, and a
+    # non-default name tag
+    _, weak = fam.build(delta=40.0)
+    assert weak.retention_s == pytest.approx(1e-9 * math.exp(40.0))
+    assert weak.name.startswith("SOT-MRAM[")
+    with pytest.raises(ValueError, match="positive"):
+        fam.build(delta=-1.0)
+
+
+def test_sot_mram_write_energy_scales_with_pulse():
+    fam = get_device_family("sot-mram")
+    _, d1 = fam.build(write_pulse_ns=1.0)
+    _, d2 = fam.build(write_pulse_ns=2.0)
+    assert d2.write_fj_per_bit == pytest.approx(2.0 * d1.write_fj_per_bit)
+    assert d2.read_fj_per_bit == pytest.approx(d1.read_fj_per_bit)
+
+
+# ---------------------------------------------------------------------------
+# FamilyGrid: the sweep-facing candidate source
+# ---------------------------------------------------------------------------
+
+def test_family_grid_default_axes_and_anchor():
+    from repro.sweep import FamilyGrid
+    from repro.sweep.grid import SRAM_ONLY_ID
+    grid = FamilyGrid("sot-mram")
+    assert grid.axes == {"delta": (40.0, 60.0),
+                         "write_pulse_ns": (0.5, 1.0, 2.0)}
+    cands = grid.candidates()
+    assert len(grid) == len(cands) == 7     # 2*3 points + SRAM anchor
+    assert cands[0].cid == SRAM_ONLY_ID
+    assert cands[0].params == {"sram_only": True, "family": None}
+    assert cands[1].cid == "sot-mram[delta=40,write_pulse_ns=0.5]"
+    for c in cands[1:]:
+        assert c.params["family"] == "sot-mram"
+        assert any(d.name == "SRAM" for d in c.devices)
+
+
+def test_family_grid_pinned_and_no_anchor():
+    from repro.sweep import FamilyGrid
+    grid = FamilyGrid("sot-mram", axes={})
+    assert len(grid) == 2                   # anchor + the pinned point
+    bare = FamilyGrid("sot-mram", axes={}, include_sram_only=False)
+    (only,) = bare.candidates()
+    assert only.devices == get_device_family("sot-mram").build()
+
+
+def test_family_grid_alias_and_floats_axis():
+    from repro.sweep import FamilyGrid
+    grid = FamilyGrid("opengcram", axes={"mixes": ("0:1", "0:0.5:1")})
+    assert grid.family == "gaincell"        # canonicalized
+    assert grid.axes == {"mixes": ((0.0, 1.0), (0.0, 0.5, 1.0))}
+    cids = [c.cid for c in grid.candidates()[1:]]
+    assert cids == ["gaincell[mixes=0:1]", "gaincell[mixes=0:0.5:1]"]
+    # the default-axes point reproduces DEFAULT_DEVICES exactly
+    assert grid.candidates()[1].devices == \
+        get_device_family("sram-gaincell-default").build()
+
+
+def test_family_grid_rejects_unknown_or_empty_axis():
+    from repro.sweep import FamilyGrid
+    with pytest.raises(ValueError, match="no parameter"):
+        FamilyGrid("sot-mram", axes={"volts": (1.0,)})
+    with pytest.raises(ValueError, match="empty"):
+        FamilyGrid("sot-mram", axes={"delta": ()})
+    with pytest.raises(ValueError, match="unknown device family"):
+        FamilyGrid("nope")
+
+
+# ---------------------------------------------------------------------------
+# the --family-param grammar
+# ---------------------------------------------------------------------------
+
+def test_parse_family_params_grammar():
+    fam = get_device_family("sot-mram")
+    axes = parse_family_params(
+        ["delta=40,60,80", "write_pulse_ns=1"], fam)
+    assert axes == {"delta": (40.0, 60.0, 80.0),
+                    "write_pulse_ns": (1.0,)}
+    gc = get_device_family("gaincell")
+    axes = parse_family_params(["mixes=0:1,0:0.5:1"], gc)
+    assert axes == {"mixes": ((0.0, 1.0), (0.0, 0.5, 1.0))}
+
+
+def test_parse_family_params_errors():
+    fam = get_device_family("sot-mram")
+    with pytest.raises(ValueError, match="needs k=v1"):
+        parse_family_params(["delta"], fam)
+    with pytest.raises(ValueError, match="no parameter 'volts'"):
+        parse_family_params(["volts=1"], fam)
+    with pytest.raises(ValueError, match="no values"):
+        parse_family_params(["delta="], fam)
+
+
+def test_family_param_coerce_kinds():
+    p = FamilyParam("x", 1.0)
+    assert p.coerce("2.5") == 2.5
+    f = FamilyParam("xs", (0.0,), kind="floats")
+    assert f.coerce("0:0.5:1") == (0.0, 0.5, 1.0)
+    assert f.coerce(0.5) == (0.5,)
+    assert f.coerce([0, 1]) == (0.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# campaign integration: the family is a cache-key component
+# ---------------------------------------------------------------------------
+
+def _campaign(tmp_path, **kw):
+    from repro.launch.campaign import CampaignRunner
+    defaults = dict(jobs=1, cache_dir=str(tmp_path / "cache"),
+                    params={"polybench-2mm": {"ni": 24, "nj": 20,
+                                              "nk": 16, "nl": 28}},
+                    sweep_axes=None)
+    defaults.update(kw)
+    return CampaignRunner("polybench-2mm", ("systolic",), **defaults)
+
+
+def test_family_is_cache_key_component(tmp_path):
+    base = {j.label: j.key for j in _campaign(tmp_path).plan()}
+    fam = {j.label: j.key
+           for j in _campaign(tmp_path, family="sot-mram").plan()}
+    axes = {j.label: j.key
+            for j in _campaign(tmp_path, family="sot-mram",
+                               family_axes={"delta": (40.0,)}).plan()}
+    again = {j.label: j.key
+             for j in _campaign(tmp_path, family="sot-mram",
+                                family_axes={"delta": (40.0,)}).plan()}
+    assert set(base) == set(fam) == set(axes)
+    assert all(base[k] != fam[k] for k in base)
+    assert all(fam[k] != axes[k] for k in fam)
+    assert axes == again
+
+
+def test_family_axes_require_family(tmp_path):
+    with pytest.raises(ValueError, match="family_axes requires"):
+        _campaign(tmp_path, family_axes={"delta": (40.0,)})
+    with pytest.raises(ValueError, match="unknown device family"):
+        _campaign(tmp_path, family="nope")
+
+
+# ---------------------------------------------------------------------------
+# import purity + CLI smokes
+# ---------------------------------------------------------------------------
+
+def test_devices_package_is_stdlib_only_at_import():
+    code = ("import sys; import repro.devices; "
+            "import repro.devices.families; "
+            "leaked = [m for m in ('numpy', 'jax') if m in sys.modules]; "
+            "assert not leaked, leaked")
+    out = subprocess.run([sys.executable, "-c", code],
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+
+
+def test_cli_devices_lists_families():
+    out = subprocess.run([sys.executable, "-m", "repro", "devices"],
+                         capture_output=True, text=True, timeout=120)
+    assert out.returncode == 0, out.stderr
+    for fam in ("sram", "gaincell", "sot-mram"):
+        assert fam in out.stdout
+    assert "--family-param delta=" in out.stdout
+
+
+def test_cli_sweep_family_dry_run():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro", "sweep", "--backend", "systolic",
+         "--dry-run", "--family", "sot-mram",
+         "--family-param", "delta=40,60"],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode == 0, out.stderr
+    assert "family=sot-mram" in out.stdout
+    assert "sot-mram[delta=40]" in out.stdout
+
+
+def test_cli_family_param_requires_family():
+    out = subprocess.run(
+        [sys.executable, "-m", "repro", "sweep", "--backend", "systolic",
+         "--dry-run", "--family-param", "delta=40"],
+        capture_output=True, text=True, timeout=600)
+    assert out.returncode != 0
+    assert "--family-param requires --family" in (out.stderr + out.stdout)

@@ -14,8 +14,8 @@ from hypothesis import given, settings, strategies as st  # noqa: E402
 import jax.numpy as jnp
 
 from repro.backends.cachesim import _simulate_cache
-from repro.core import (DEFAULT_DEVICES, SRAM, compose, compute_stats,
-                        lifetimes_of_trace, make_trace)
+from repro.core import (DEFAULT_DEVICES, SRAM, DeviceModel, compose,
+                        compute_stats, lifetimes_of_trace, make_trace)
 
 @pytest.mark.slow
 @settings(max_examples=30, deadline=None)
@@ -154,6 +154,75 @@ def test_lifetime_extraction_permutation_invariant(seed):
     lt1 = sorted(np.asarray(s1.lifetime_cycles)[np.asarray(s1.valid)])
     lt2 = sorted(np.asarray(s2.lifetime_cycles)[np.asarray(s2.valid)])
     assert lt1 == lt2
+
+
+@pytest.mark.slow
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_symmetric_devices_collapse_to_per_access_billing(data):
+    """On devices with ``read_fj == write_fj`` the per-operation billing
+    introduced with the device-family registry degenerates to the
+    collapsed single-per-access-energy model: every policy's composition
+    energy and every monolithic projection can be recomputed from just
+    ``a = read = write`` (one refresh = two accesses), with no separate
+    read/write terms anywhere."""
+    seed = data.draw(st.integers(0, 2 ** 16))
+    policy = data.draw(st.sampled_from(
+        ["refresh-free", "refresh-aware",
+         "bank-quantized:refresh-aware@8"]))
+    a_sram = data.draw(st.floats(10.0, 30.0))
+    a_fast = data.draw(st.floats(1.0, 9.0))
+    a_mid = data.draw(st.floats(1.0, 9.0))
+    r_fast = data.draw(st.sampled_from([-7, -6, -5]))
+    r_mid = data.draw(st.sampled_from([-6, -5, -4]))
+    devs = (
+        DeviceModel("SRAM", 0.021, a_sram, a_sram, np.inf),
+        DeviceModel("SYM-A", 0.010, a_fast, a_fast, 10.0 ** r_fast),
+        DeviceModel("SYM-B", 0.008, a_mid, a_mid, 10.0 ** r_mid),
+    )
+    rng = np.random.RandomState(seed)
+    n = data.draw(st.integers(20, 200))
+    t = np.sort(rng.randint(0, 10 ** 6, n))
+    a = rng.randint(0, 12, n)
+    w = rng.rand(n) < 0.35
+    w[0] = True
+    tr = make_trace(t, a, w)
+    stats = compute_stats(tr, 0)
+    raw = lifetimes_of_trace(tr)
+    comp = compose(stats, raw=raw, clock_hz=tr.clock_hz, devices=devs,
+                   policy=policy)
+
+    # collapsed recomputation: a single per-access fJ number per device
+    ordered = sorted(devs, key=lambda d: (d.read_fj_per_bit
+                                          + d.write_fj_per_bit, d.name))
+    acc = np.array([d.read_fj_per_bit for d in ordered])   # == write_fj
+    ret = np.array([d.retention_at(stats.write_freq_hz) for d in ordered])
+    lt = stats.lifetimes_s
+    accesses = stats.accesses_per_lifetime            # 1 write + n reads
+    bits = stats.lifetime_bits
+    refresh = np.maximum(np.ceil(lt[None, :] / ret[:, None]) - 1.0, 0.0)
+    per_dev = acc[:, None] * bits[None, :] * (
+        accesses[None, :] + 2.0 * refresh)            # [D, L] fJ
+    if policy == "refresh-free":
+        fits = lt[None, :] <= ret[:, None]
+        chosen = np.where(fits.any(axis=0), np.argmax(fits, axis=0),
+                          len(ordered) - 1)
+        expected = per_dev[chosen, np.arange(len(lt))].sum() * 1e-15
+    else:
+        expected = per_dev.min(axis=0).sum() * 1e-15
+    assert comp.energy_j == pytest.approx(expected, rel=1e-12, abs=1e-30)
+
+    # monolithic projections collapse the same way: a * (accesses + 2R)
+    from repro.core.frontend import analyze_refresh
+    for d in devs:
+        r_total = analyze_refresh(stats, d)
+        total_bits = (stats.n_reads + stats.n_writes) * stats.block_bits
+        flat = d.read_fj_per_bit * (total_bits + 2.0 * r_total) * 1e-15
+        assert comp.monolithic_energy_j[d.name] == pytest.approx(
+            flat, rel=1e-12, abs=1e-30)
+
+    assert (comp.quantization is not None) == policy.startswith(
+        "bank-quantized")
 
 
 def test_device_energy_scaling_linear():

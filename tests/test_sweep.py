@@ -278,14 +278,15 @@ def test_sweep_result_exports(analyzed_session):
     assert blob["n_points"] == len(res)
     assert set(blob["frontiers"]) == {"ifmap", "filter", "ofmap"}
     rows = res.csv_rows()
-    assert rows[0].startswith("geometry,subpartition,candidate,policy,")
+    assert rows[0].startswith(
+        "geometry,subpartition,candidate,family,policy,")
     assert len(rows) == len(res) + 1
     # every frontier candidate is flagged on_frontier=1 in the CSV
     import csv
     parsed = list(csv.reader(rows[1:]))
-    assert all(len(r) == 8 for r in parsed)  # comma-safe quoting
-    assert all(r[3] == "refresh-free" for r in parsed)  # policy column
-    flagged = {(r[1], r[2]) for r in parsed if r[6] == "1"}
+    assert all(len(r) == 9 for r in parsed)  # comma-safe quoting
+    assert all(r[4] == "refresh-free" for r in parsed)  # policy column
+    flagged = {(r[1], r[2]) for r in parsed if r[7] == "1"}
     expect = {(sub, p.candidate)
               for (geom, sub), fr in res.frontiers().items()
               for p in fr.points}
