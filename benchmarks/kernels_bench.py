@@ -83,4 +83,19 @@ def kernels_bench():
     print(f"lifetime_scan {n_ev} events: {us:.0f}us "
           f"({n_ev / us:.1f} ev/us, interpret mode)")
     rows.append(f"kernel.lifetime_scan,{us:.1f},events={n_ev}")
+
+    # int64 path: same workload offset past 2**40 — exercises the
+    # rebase + split-limb pipeline (jit-warm: shapes/dtypes match the
+    # row above, so only the host rebase and kernel dispatch differ)
+    t64 = t.astype(np.int64) + 2 ** 40
+    t0 = time.monotonic()
+    hist64, stats64 = lifetime_histogram(t64, a, w, edges, block=1024)
+    jax.block_until_ready(hist64)
+    us64 = (time.monotonic() - t0) * 1e6
+    assert np.array_equal(np.asarray(hist64), np.asarray(hist)), \
+        "int64 rebase must not change the histogram"
+    print(f"lifetime_scan int64 (+2**40) {n_ev} events: {us64:.0f}us "
+          f"({n_ev / us64:.1f} ev/us, interpret mode)")
+    rows.append(f"kernels.lifetime_scan.int64,{us64:.1f},"
+                f"events={n_ev};offset=2**40")
     return rows

@@ -49,6 +49,10 @@ DEFAULT_CONTRACTS = (
     ImportContract("repro.cluster", ("jax", "numpy"), recursive=True),
     ImportContract("repro.analysis", ("jax", "numpy"), recursive=True),
     ImportContract("repro.launch.campaign", ("jax", "numpy")),
+    # non-recursive on purpose: repro.compose.jax_engine is the one
+    # compose module allowed to import jax at import time (the engine
+    # package lazy-imports it only when engine="jax" is requested)
+    ImportContract("repro.compose", ("jax",)),
     ImportContract("repro.compose.policies", ("jax",)),
     ImportContract("repro.__main__", ("jax", "numpy")),
 )

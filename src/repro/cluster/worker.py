@@ -59,7 +59,8 @@ def runner_from_manifest(manifest: dict, store_dir: str):
         family=manifest.get("family"),
         family_axes=manifest.get("family_axes"),
         devices=manifest.get("devices"),
-        policy=manifest.get("policy", "refresh-free"))
+        policy=manifest.get("policy", "refresh-free"),
+        engine=manifest.get("engine", "numpy"))
 
 
 class _Heartbeat:

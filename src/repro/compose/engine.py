@@ -33,11 +33,19 @@ pre-refactor scalar ``compose()`` — device ordering, comparison
 results, and float accumulation order are preserved exactly
 (``tests/test_compose_policies.py`` locks it against a frozen copy of
 the seed implementation).
+
+Engines: ``evaluate(..., engine="numpy")`` (default) runs the policy
+kernels + reductions here in NumPy and carries the bit-for-bit seed
+guarantee above; ``engine="jax"`` dispatches each candidate chunk to
+the fused jitted kernels in :mod:`repro.compose.jax_engine` (imported
+lazily — this module stays jax-free), which agree with the NumPy
+oracle to ~1e-9 relative energy (``tests/test_jax_engine.py``).
 """
 
 from __future__ import annotations
 
 import math
+import weakref
 from typing import Mapping, Sequence
 
 import numpy as np
@@ -66,10 +74,24 @@ def _device_sort_key(device: DeviceModel) -> tuple:
     return (_access_energy_fj(device), device.name)
 
 
+# Memo for address_groups: id(raw) -> (weakref(raw), clock_hz, groups).
+# Raw lifetime records are frozen dataclasses treated as immutable
+# analysis artifacts, so the grouping (a pure function of raw and the
+# clock) is computed once per subpartition and reused across every
+# evaluate() call — policies, engines, and benches alike.  The weakref
+# guards against id reuse and evicts the entry when raw is collected.
+_groups_memo: dict = {}
+
+
 def address_groups(raw, clock_hz: float) -> AddressGroups:
     """Group the valid lifetimes of ``raw`` by address (stable order),
     carrying each address's max lifetime — computed once per
-    subpartition and shared across every candidate and policy."""
+    subpartition (memoized on ``raw``'s identity) and shared across
+    every candidate and policy."""
+    key = id(raw)
+    hit = _groups_memo.get(key)
+    if hit is not None and hit[0]() is raw and hit[1] == clock_hz:
+        return hit[2]
     valid = np.asarray(raw.valid)
     addr = np.asarray(raw.addr)[valid]
     lt_cyc = np.asarray(raw.lifetime_cycles)[valid]
@@ -79,8 +101,14 @@ def address_groups(raw, clock_hz: float) -> AddressGroups:
     grp = np.cumsum(new) - 1
     max_lt = np.zeros(grp[-1] + 1 if len(grp) else 0)
     np.maximum.at(max_lt, grp, lt_sorted)
-    return AddressGroups(order=order, starts=np.flatnonzero(new),
-                         max_lt_s=max_lt / clock_hz)
+    groups = AddressGroups(order=order, starts=np.flatnonzero(new),
+                           max_lt_s=max_lt / clock_hz)
+    try:
+        ref = weakref.ref(raw, lambda _, k=key: _groups_memo.pop(k, None))
+        _groups_memo[key] = (ref, clock_hz, groups)
+    except TypeError:
+        pass          # raw not weakref-able: skip the memo
+    return groups
 
 
 def _per_address_max_lifetime_s(raw, clock_hz: float) -> np.ndarray:
@@ -154,6 +182,42 @@ def _empty_composition(stats: SubpartitionStats, devs: list,
     )
 
 
+def _numpy_candidate(asg, k: int, devs, reads, bits, w):
+    """Energy + raw capacity fractions for candidate ``k`` of a chunk's
+    policy assignment — the NumPy oracle's per-candidate reductions.
+
+    The energy loop keeps the exact float accumulation order of the
+    seed ``compose()``: per-device masked sums, accumulated
+    cheapest-device first.  Capacity counts come from one ``bincount``
+    over the per-address picks (an exact integer count / size, so
+    bit-identical to the former per-device ``np.mean(ad == i)`` loop
+    without being O(D·A) per candidate); the bits-weighted ``w``
+    fallback stays a masked sum — reweighting it would change the
+    summation order the seed contract freezes.
+    """
+    ff = asg.lifetime_dev[k]
+    refresh = (None if asg.refresh_per_lifetime is None
+               else asg.refresh_per_lifetime[k])
+    energy = 0.0
+    for i, d in enumerate(devs):
+        sel = ff == i
+        if refresh is None:
+            energy += float(_energy_per_lifetime_j(
+                d, reads[sel], bits[sel]).sum())
+        else:
+            e_fj = (d.write_fj_per_bit * bits[sel]
+                    + d.read_fj_per_bit * reads[sel] * bits[sel]
+                    + refresh[sel] * d.refresh_energy_fj_per_bit()
+                    * bits[sel])
+            energy += float((e_fj * 1e-15).sum())
+    if asg.addr_dev is not None:
+        ad = asg.addr_dev[k]
+        frac = np.bincount(ad, minlength=len(devs))[:len(devs)] / ad.size
+    else:
+        frac = np.array([w[ff == i].sum() for i in range(len(devs))])
+    return energy, frac
+
+
 def evaluate(
     device_sets: Sequence[Sequence[DeviceModel]],
     stats: SubpartitionStats,
@@ -161,6 +225,7 @@ def evaluate(
     *,
     clock_hz: float = 1.0e9,
     policy: AssignmentPolicy | str = "refresh-free",
+    engine: str = "numpy",
 ) -> list:
     """One :class:`Composition` per candidate device set, all evaluated
     through the same batched policy kernel.
@@ -169,8 +234,22 @@ def evaluate(
     the sweep's inner loop.  Candidates are processed in chunks
     end-to-end (policy broadcast and reductions alike), so peak memory
     is bounded however large the grid.
+
+    ``engine`` selects the chunk executor: ``"numpy"`` (default,
+    bit-for-bit seed contract) or ``"jax"`` (fused jitted kernels,
+    ~1e-9-relative agreement; see :mod:`repro.compose.jax_engine`).
     """
+    if engine not in ("numpy", "jax"):
+        raise ValueError(
+            f"engine must be 'numpy' or 'jax', got {engine!r}")
     pol = get_policy(policy)
+    jax_engine = None
+    if engine == "jax":
+        from repro.compose import jax_engine  # lazy: keeps this module jax-free
+        if not jax_engine.supports(pol):
+            raise ValueError(
+                f"engine='jax' has no fused kernel for policy "
+                f"{pol.name!r}; use engine='numpy'")
     sets = [tuple(ds) for ds in device_sets]
     if not sets:
         return []
@@ -189,9 +268,8 @@ def evaluate(
     bits = stats.lifetime_bits
     reads = stats.accesses_per_lifetime - 1.0
     groups = address_groups(raw, clock_hz) if raw is not None else None
-    if groups is None:
-        # capacity fallback: bits-weighted per-lifetime fractions
-        w = bits / bits.sum()
+    # capacity fallback when ungrouped: bits-weighted per-lifetime fractions
+    w = bits / bits.sum() if groups is None else None
 
     # Monolithic baselines depend on (stats, device); memoized by device
     # — SRAM is shared by every candidate, scale variants recur.
@@ -223,37 +301,24 @@ def evaluate(
     out = []
     for lo in range(0, len(sets), chunk):
         hi = min(lo + chunk, len(sets))
-        asg = pol.assign(PolicyBatch(
+        batch = PolicyBatch(
             devs=tuple(sorted_devs[lo:hi]), ret_s=ret[lo:hi],
             read_fj=read_fj[lo:hi], write_fj=write_fj[lo:hi],
             pad=pad[lo:hi], fallback=fallback[lo:hi],
-            lt_s=lt, reads=reads, bits=bits, groups=groups))
+            lt_s=lt, reads=reads, bits=bits, groups=groups)
+        if jax_engine is not None:
+            e_chunk, f_chunk = jax_engine.run_chunk(pol, batch)
+            asg = None
+        else:
+            asg = pol.assign(batch)
         for ci in range(lo, hi):
             devs, dset = sorted_devs[ci], sets[ci]
-            ff = asg.lifetime_dev[ci - lo]
-            refresh = (None if asg.refresh_per_lifetime is None
-                       else asg.refresh_per_lifetime[ci - lo])
-            # The exact float accumulation order of the seed compose():
-            # per-device masked sums, accumulated cheapest-device first.
-            energy = 0.0
-            for i, d in enumerate(devs):
-                sel = ff == i
-                if refresh is None:
-                    energy += float(_energy_per_lifetime_j(
-                        d, reads[sel], bits[sel]).sum())
-                else:
-                    e_fj = (d.write_fj_per_bit * bits[sel]
-                            + d.read_fj_per_bit * reads[sel] * bits[sel]
-                            + refresh[sel] * d.refresh_energy_fj_per_bit()
-                            * bits[sel])
-                    energy += float((e_fj * 1e-15).sum())
-            if asg.addr_dev is not None:
-                ad = asg.addr_dev[ci - lo]
-                frac = np.array(
-                    [np.mean(ad == i) for i in range(len(devs))])
+            if asg is None:
+                energy = float(e_chunk[ci - lo])
+                frac = f_chunk[ci - lo, :len(devs)].copy()
             else:
-                frac = np.array(
-                    [w[ff == i].sum() for i in range(len(devs))])
+                energy, frac = _numpy_candidate(
+                    asg, ci - lo, devs, reads, bits, w)
             frac, quant = pol.capacity(frac, devs)
             mono = {d.name: mono_energy(d) for d in dset}
             sram_e = mono["SRAM"]
@@ -279,11 +344,12 @@ def compose(
     devices: Sequence[DeviceModel] = DEFAULT_DEVICES,
     clock_hz: float = 1.0e9,
     policy: AssignmentPolicy | str = "refresh-free",
+    engine: str = "numpy",
 ) -> Composition:
     """Derive the composition for one subpartition under one policy —
     the single-candidate entry into :func:`evaluate`."""
     (comp,) = evaluate([tuple(devices)], stats, raw=raw,
-                       clock_hz=clock_hz, policy=policy)
+                       clock_hz=clock_hz, policy=policy, engine=engine)
     return comp
 
 

@@ -269,19 +269,22 @@ class ProfileSession:
 
     def compose(self, *,
                 devices: Sequence[DeviceModel | str] | None = None,
-                policy="refresh-free") -> "ProfileSession":
+                policy="refresh-free",
+                engine="numpy") -> "ProfileSession":
         """Derive the heterogeneous composition for every subpartition and
         attach it to the report (paper Table 7 / §7.1.5).  ``policy=``
         selects the assignment policy (``"refresh-free"`` default,
         ``"refresh-aware"``, ``"bank-quantized[:<base>][@<n_banks>]"`` —
-        see :mod:`repro.compose`)."""
+        see :mod:`repro.compose`); ``engine=`` the evaluation backend
+        (``"numpy"`` oracle or jitted ``"jax"``)."""
         if self._report is None:
             self.analyze()
         devs = resolve_devices(devices) if devices is not None \
             else self.devices
         for name, (st, raw) in self._stats.items():
             comp = compose_stats(st, raw=raw, devices=devs,
-                                 clock_hz=self._clock_hz, policy=policy)
+                                 clock_hz=self._clock_hz, policy=policy,
+                                 engine=engine)
             self._compositions[name] = comp
             entry = {
                 "devices": list(comp.devices),
@@ -296,19 +299,21 @@ class ProfileSession:
         return self
 
     def sweep(self, grid=None, *, workers: int = 1,
-              policy="refresh-free", attach: bool = True):
+              policy="refresh-free", engine="numpy", attach: bool = True):
         """Evaluate a composition design-space sweep over every analyzed
         subpartition and return the :class:`repro.sweep.SweepResult`
         (grid defaults to ``repro.sweep.DeviceGrid()``; auto-runs
         ``analyze()`` if needed).  ``policy=`` is the assignment policy
-        applied to every candidate.
+        applied to every candidate; ``engine=`` the evaluation backend
+        (``"numpy"`` oracle or jitted ``"jax"``).
 
         With ``attach=True`` the per-subpartition Pareto frontiers are
         also recorded under ``report()["sweep"]``.
         """
         from repro.sweep import SweepRunner
         self._require_analyzed()
-        runner = SweepRunner(grid, workers=workers, policy=policy)
+        runner = SweepRunner(grid, workers=workers, policy=policy,
+                             engine=engine)
         result = runner.run_session(self)
         if attach:
             self._report["sweep"] = {
@@ -328,14 +333,14 @@ class ProfileSession:
     def run(self, workload, *, mode: str | None = None,
             write_allocate: bool | None = None,
             devices: Sequence[DeviceModel | str] | None = None,
-            policy="refresh-free",
+            policy="refresh-free", engine="numpy",
             report_path: str | None = None, **cfg) -> dict:
         """profile -> analyze -> compose -> report in one call.
 
         Analysis options are routed by stage instead of all landing on
         the backend: ``mode``/``devices`` go to ``analyze()``/
-        ``compose()``, ``policy`` to ``compose()``, everything else to
-        ``profile()``.  An explicit ``write_allocate`` goes to *both*
+        ``compose()``, ``policy``/``engine`` to ``compose()``, everything
+        else to ``profile()``.  An explicit ``write_allocate`` goes to *both*
         the frontend and — on cache-mode backends, where it is also a
         simulator policy — the backend, so the two stay in agreement
         (paper Table 8 pairs them); scratchpad backends have no
@@ -349,7 +354,7 @@ class ProfileSession:
                      write_allocate=(True if write_allocate is None
                                      else write_allocate),
                      devices=devices)
-        self.compose(devices=devices, policy=policy)
+        self.compose(devices=devices, policy=policy, engine=engine)
         return self.report(report_path)
 
     @classmethod

@@ -52,12 +52,14 @@ def compose(
     devices: Sequence[DeviceModel] = DEFAULT_DEVICES,
     clock_hz: float = 1.0e9,
     policy="refresh-free",
+    engine="numpy",
 ) -> Composition:
     """Derive the optimal composition for one subpartition under one
-    assignment policy (see :mod:`repro.compose`)."""
+    assignment policy (see :mod:`repro.compose`).  ``engine=`` selects
+    the evaluation backend (``"numpy"`` oracle or jitted ``"jax"``)."""
     from repro.compose.engine import compose as _compose
     return _compose(stats, raw=raw, devices=devices, clock_hz=clock_hz,
-                    policy=policy)
+                    policy=policy, engine=engine)
 
 
 def __getattr__(name):

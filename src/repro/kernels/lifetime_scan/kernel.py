@@ -11,14 +11,25 @@ one-hot matmul-style masks (MXU/VPU friendly), merges the segment that
 straddles the block boundary through SMEM carry scalars, and accumulates
 the histogram in VMEM scratch.  Events stream through HBM exactly once.
 
+Time is carried as a **split int64**: two int32 limbs (hi = t >> 30,
+lo = t & (2**30 - 1)) so rebased cycle stamps up to 2**61 survive the
+int32-only TPU datapath.  All segment reductions on time become
+lexicographic (hi first, lo tie-break) two-pass masked reductions, the
+lifetime is a borrow-normalized limb subtraction, and histogram binning
+compares limb pairs against pre-ceiled integer edges (ops.py converts
+float64 edges to exact int64 thresholds: for integer lifetimes,
+``lt >= e`` iff ``lt >= ceil(e)`` and ``lt < e`` iff ``lt < ceil(e)``).
+
 Inputs (sorted by (addr, time); padded by ops.py with write events at a
-sentinel address):
-  t[N] i32, addr[N] i32, w[N] i32 (1 = write)
-  edges[NB+1] f32 histogram bin edges (cycles)
+sentinel address; time rebased to min 0 and limb-split by ops.py):
+  t_hi[N] i32, t_lo[N] i32, addr[N] i32, w[N] i32 (1 = write)
+  edges_hi[NB+1] i32, edges_lo[NB+1] i32  integer bin-edge limbs (cycles)
 
 Outputs:
   hist[NB]  f32  closed non-orphan lifetimes per bin
   stats[8]  f32  (closed, orphans, sum_lt, max_lt, reads, writes, 0, 0)
+  sum_lt/max_lt are f32 aggregates of exact integer lifetimes, so past
+  2**24 cycles they carry f32 rounding; the histogram itself is exact.
 """
 
 from __future__ import annotations
@@ -30,35 +41,44 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-I32_MAX = 2 ** 31 - 1  # python int: becomes an in-kernel literal
+I32_MAX = 2 ** 31 - 1   # python int: becomes an in-kernel literal
+LO_BITS = 30            # lo limb width; 30 keeps borrow arithmetic in int32
+LO_MOD = 2 ** LO_BITS
 
 
-def _lifetime_kernel(t_ref, a_ref, w_ref, edges_ref, hist_ref, stats_ref,
-                     hist_scr, stats_scr, carry_scr, *, block, n_blocks,
-                     n_bins):
+def _lifetime_kernel(th_ref, tl_ref, a_ref, w_ref, eh_ref, el_ref,
+                     hist_ref, stats_ref, hist_scr, stats_scr, carry_scr,
+                     *, block, n_blocks, n_bins):
     bi = pl.program_id(0)
 
     @pl.when(bi == 0)
     def _init():
         hist_scr[...] = jnp.zeros_like(hist_scr)
         stats_scr[...] = jnp.zeros_like(stats_scr)
-        # carry: [prev_addr, seg_start, last_read, n_reads, started]
+        # carry: [prev_addr, start_hi, start_lo, lastr_hi, lastr_lo,
+        #         n_reads, started]
         carry_scr[0] = jnp.int32(-2)   # impossible address
         carry_scr[1] = jnp.int32(0)
-        carry_scr[2] = jnp.int32(-1)
-        carry_scr[3] = jnp.int32(0)
-        carry_scr[4] = jnp.int32(0)
+        carry_scr[2] = jnp.int32(0)
+        carry_scr[3] = jnp.int32(-1)
+        carry_scr[4] = jnp.int32(-1)
+        carry_scr[5] = jnp.int32(0)
+        carry_scr[6] = jnp.int32(0)
 
-    t = t_ref[...]
+    th = th_ref[...]
+    tl = tl_ref[...]
     a = a_ref[...]
     w = w_ref[...].astype(bool)
-    edges = edges_ref[...]
+    eh = eh_ref[...]
+    el = el_ref[...]
 
     prev_addr = carry_scr[0]
-    c_start = carry_scr[1]
-    c_lastr = carry_scr[2]
-    c_nread = carry_scr[3]
-    started = carry_scr[4]
+    c_start_hi = carry_scr[1]
+    c_start_lo = carry_scr[2]
+    c_lastr_hi = carry_scr[3]
+    c_lastr_lo = carry_scr[4]
+    c_nread = carry_scr[5]
+    started = carry_scr[6]
 
     prev_a = jnp.concatenate([prev_addr[None], a[:-1]])
     boundary = (a != prev_a) | w
@@ -68,22 +88,29 @@ def _lifetime_kernel(t_ref, a_ref, w_ref, edges_ref, hist_ref, stats_ref,
     ids = jax.lax.broadcasted_iota(jnp.int32, (block, block), 1)  # seg cols
     O = sid[:, None] == ids                            # [event, seg]
     r = ~w
-    t_col = t[:, None]
+    Or = O & r[:, None]
 
-    seg_min = jnp.where(O, t_col, I32_MAX).min(axis=0)            # [block]
-    seg_lastr = jnp.where(O & r[:, None], t_col, -1).max(axis=0)
-    seg_nread = jnp.sum((O & r[:, None]).astype(jnp.int32), axis=0)
+    # per-segment first event: lexicographic (hi, lo) min, two masked
+    # passes (min hi, then min lo among events at that hi)
+    sh = jnp.where(O, th[:, None], I32_MAX).min(axis=0)             # [block]
+    sl = jnp.where(O & (th[:, None] == sh[None, :]),
+                   tl[:, None], I32_MAX).min(axis=0)
+    # per-segment last read: lexicographic (hi, lo) max over reads
+    lh = jnp.where(Or, th[:, None], -1).max(axis=0)
+    ll = jnp.where(Or & (th[:, None] == lh[None, :]),
+                   tl[:, None], -1).max(axis=0)
+    seg_nread = jnp.sum(Or.astype(jnp.int32), axis=0)
 
-    # merge the carried segment into sid 0
-    seg_start = jnp.where(
-        jnp.arange(block) == 0,
-        jnp.where(started > 0, c_start, seg_min),
-        seg_min)
-    seg_lastr = jnp.where(
-        jnp.arange(block) == 0,
-        jnp.maximum(c_lastr, seg_lastr), seg_lastr)
-    seg_nread = jnp.where(
-        jnp.arange(block) == 0, c_nread + seg_nread, seg_nread)
+    # merge the carried segment into sid 0 (carry start predates any
+    # in-block event of the same segment; last-read needs the lexi max)
+    col0 = jnp.arange(block) == 0
+    use_c = started > 0
+    sh = jnp.where(col0, jnp.where(use_c, c_start_hi, sh), sh)
+    sl = jnp.where(col0, jnp.where(use_c, c_start_lo, sl), sl)
+    c_wins = (c_lastr_hi > lh) | ((c_lastr_hi == lh) & (c_lastr_lo > ll))
+    lh = jnp.where(col0 & c_wins, c_lastr_hi, lh)
+    ll = jnp.where(col0 & c_wins, c_lastr_lo, ll)
+    seg_nread = jnp.where(col0, c_nread + seg_nread, seg_nread)
 
     # segments 0 .. nb-1 close in this block (segment nb stays open)
     seg_ids = jax.lax.iota(jnp.int32, block)
@@ -93,16 +120,29 @@ def _lifetime_kernel(t_ref, a_ref, w_ref, edges_ref, hist_ref, stats_ref,
     closed = closed & ((seg_ids > 0) | (started > 0) | (sid0_events > 0))
 
     has_read = seg_nread > 0
-    lt = jnp.where(closed & has_read,
-                   jnp.maximum(seg_lastr - seg_start, 0), 0)
     live = closed & has_read
     orphan = closed & (~has_read)
 
-    ltf = lt.astype(jnp.float32)
-    in_bin = (ltf[:, None] >= edges[None, :-1]) & \
-        (ltf[:, None] < edges[None, 1:]) & live[:, None]
+    # lifetime = last_read - start as borrow-normalized limb subtraction;
+    # inputs keep lo in [0, LO_MOD) so one borrow suffices
+    d_lo = ll - sl
+    borrow = (d_lo < 0).astype(jnp.int32)
+    d_hi = lh - sh - borrow
+    d_lo = d_lo + borrow * LO_MOD
+    ok = live & (d_hi >= 0)
+    d_hi = jnp.where(ok, d_hi, 0)
+    d_lo = jnp.where(ok, d_lo, 0)
+
+    # bin by limb-pair comparison against integer edges (exact)
+    ge_lo = (d_hi[:, None] > eh[None, :-1]) | \
+        ((d_hi[:, None] == eh[None, :-1]) & (d_lo[:, None] >= el[None, :-1]))
+    lt_hi = (d_hi[:, None] < eh[None, 1:]) | \
+        ((d_hi[:, None] == eh[None, 1:]) & (d_lo[:, None] < el[None, 1:]))
+    in_bin = ge_lo & lt_hi & live[:, None]
     hist_scr[...] += in_bin.astype(jnp.float32).sum(axis=0)
 
+    ltf = d_hi.astype(jnp.float32) * jnp.float32(LO_MOD) + \
+        d_lo.astype(jnp.float32)
     stats_scr[0] += jnp.sum(live.astype(jnp.float32))
     stats_scr[1] += jnp.sum(orphan.astype(jnp.float32))
     stats_scr[2] += jnp.sum(ltf * live.astype(jnp.float32))
@@ -114,10 +154,12 @@ def _lifetime_kernel(t_ref, a_ref, w_ref, edges_ref, hist_ref, stats_ref,
     # element, so a masked sum extracts it (works for -1 sentinels too)
     sel = seg_ids == nb
     carry_scr[0] = a[-1]
-    carry_scr[1] = jnp.sum(jnp.where(sel, seg_start, 0))
-    carry_scr[2] = jnp.sum(jnp.where(sel, seg_lastr, 0))
-    carry_scr[3] = jnp.sum(jnp.where(sel, seg_nread, 0))
-    carry_scr[4] = jnp.int32(1)
+    carry_scr[1] = jnp.sum(jnp.where(sel, sh, 0))
+    carry_scr[2] = jnp.sum(jnp.where(sel, sl, 0))
+    carry_scr[3] = jnp.sum(jnp.where(sel, lh, 0))
+    carry_scr[4] = jnp.sum(jnp.where(sel, ll, 0))
+    carry_scr[5] = jnp.sum(jnp.where(sel, seg_nread, 0))
+    carry_scr[6] = jnp.int32(1)
 
     @pl.when(bi == n_blocks - 1)
     def _finish():
@@ -127,14 +169,15 @@ def _lifetime_kernel(t_ref, a_ref, w_ref, edges_ref, hist_ref, stats_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("block", "n_bins", "interpret"))
-def lifetime_scan_sorted(t, addr, is_write, edges, *, block=256,
-                         n_bins=64, interpret=False):
-    """Inputs pre-sorted by (addr, time) and pre-padded to block multiple
-    (ops.py handles both).  Returns (hist [n_bins], stats [8])."""
-    n = t.shape[0]
+def lifetime_scan_sorted(t_hi, t_lo, addr, is_write, edges_hi, edges_lo,
+                         *, block=256, n_bins=64, interpret=False):
+    """Inputs pre-sorted by (addr, time), limb-split, and pre-padded to a
+    block multiple (ops.py handles all three).  Returns
+    (hist [n_bins], stats [8])."""
+    n = t_hi.shape[0]
     assert n % block == 0
     n_blocks = n // block
-    assert edges.shape[0] == n_bins + 1
+    assert edges_hi.shape[0] == n_bins + 1
 
     hist, stats = pl.pallas_call(
         functools.partial(_lifetime_kernel, block=block, n_blocks=n_blocks,
@@ -144,6 +187,8 @@ def lifetime_scan_sorted(t, addr, is_write, edges, *, block=256,
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
             pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((block,), lambda i: (i,)),
+            pl.BlockSpec((n_bins + 1,), lambda i: (0,)),
             pl.BlockSpec((n_bins + 1,), lambda i: (0,)),
         ],
         out_specs=[
@@ -157,9 +202,10 @@ def lifetime_scan_sorted(t, addr, is_write, edges, *, block=256,
         scratch_shapes=[
             pltpu.VMEM((n_bins,), jnp.float32),
             pltpu.VMEM((8,), jnp.float32),
-            pltpu.SMEM((5,), jnp.int32),
+            pltpu.SMEM((7,), jnp.int32),
         ],
         interpret=interpret,
-    )(t.astype(jnp.int32), addr.astype(jnp.int32),
-      is_write.astype(jnp.int32), edges.astype(jnp.float32))
+    )(t_hi.astype(jnp.int32), t_lo.astype(jnp.int32),
+      addr.astype(jnp.int32), is_write.astype(jnp.int32),
+      edges_hi.astype(jnp.int32), edges_lo.astype(jnp.int32))
     return hist, stats

@@ -6,7 +6,6 @@ bins the result - the kernel must reproduce these aggregates exactly.
 
 from __future__ import annotations
 
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.lifetime import extract_lifetimes
@@ -15,8 +14,8 @@ from repro.core.lifetime import extract_lifetimes
 def lifetime_hist_reference(t, addr, is_write, edges):
     """Returns (hist [NB], stats [8]) matching the kernel contract."""
     stats = extract_lifetimes(
-        jnp.asarray(t, jnp.int32), jnp.asarray(addr),
-        jnp.asarray(is_write), jnp.ones_like(jnp.asarray(is_write), bool),
+        np.asarray(t, np.int64), np.asarray(addr),
+        np.asarray(is_write), np.ones_like(np.asarray(is_write), bool),
         mode="scratchpad")
     valid = np.asarray(stats.valid)
     orphan = np.asarray(stats.orphan)

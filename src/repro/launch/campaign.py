@@ -190,6 +190,11 @@ class CampaignRunner:
         sweep (``repro.compose.get_policy`` grammar); the canonical
         policy name is a cache-key component, so changing policy never
         reuses another policy's artifacts.
+    engine : composition evaluation backend, ``"numpy"`` (default,
+        bit-for-bit oracle) or ``"jax"`` (jitted, ~1e-9 relative
+        energy).  Deliberately *not* a cache-key component: both
+        engines produce the same artifacts within tolerance, so cached
+        results are reusable across engines.
     scheduler : ``"thread"`` (in-process pool, the PR-4 path kept
         bit-for-bit) or ``"process"`` (lease-based worker processes
         over a shared artifact store — see ``repro.cluster``).
@@ -215,12 +220,17 @@ class CampaignRunner:
                  family_axes: Mapping | None = None,
                  devices: Sequence[str] | None = None,
                  policy: str = "refresh-free",
+                 engine: str = "numpy",
                  scheduler: str = "thread",
                  lease_ttl_s: float = 30.0,
                  max_retries: int = 3):
         from repro.compose.policies import get_policy
         self.workloads = resolve_workloads(workloads)
         self.policy = get_policy(policy).name    # canonical, validated
+        if engine not in ("numpy", "jax"):
+            raise ValueError(
+                f"engine must be 'numpy' or 'jax', got {engine!r}")
+        self.engine = engine
         self.backends = tuple(dict.fromkeys(
             canonical_backend(b.strip()) for b in (
                 backends.split(",") if isinstance(backends, str)
@@ -333,7 +343,7 @@ class CampaignRunner:
         cfg = {**cfg, **dict(job.cfg)}
         session = ProfileSession(job.backend, devices=self.devices)
         session.profile(workload, **cfg).analyze()
-        session.compose(policy=self.policy)
+        session.compose(policy=self.policy, engine=self.engine)
         report = session.report()
 
         short_lived: dict = {}
@@ -353,7 +363,8 @@ class CampaignRunner:
                 from repro.sweep import DeviceGrid
                 grid = DeviceGrid(**self.sweep_axes)
             result = session.sweep(grid, attach=False,
-                                   policy=self.policy)
+                                   policy=self.policy,
+                                   engine=self.engine)
             sweep_points = [
                 {"candidate": p.candidate,
                  "subpartition": p.subpartition,
@@ -461,6 +472,7 @@ class CampaignRunner:
                 "family_axes": self.family_axes,
                 "devices": list(self.devices) if self.devices else None,
                 "policy": self.policy,
+                "engine": self.engine,
                 "lease_ttl_s": self.lease_ttl_s,
                 "max_retries": self.max_retries}
 
@@ -807,6 +819,11 @@ def main(argv=None):
                          "per-job sweep: refresh-free | refresh-aware | "
                          "bank-quantized[:<base>][@<n_banks>] (part of "
                          "the trace-cache key)")
+    ap.add_argument("--engine", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="composition evaluation backend (jax = jitted, "
+                         "~1e-9 relative energy; not a cache-key "
+                         "component)")
     ap.add_argument("--out", default=None,
                     help="aggregate JSON path (default: "
                          "<cache-dir>/campaign_report.json)")
@@ -844,6 +861,7 @@ def main(argv=None):
         retention_bins=_floats(args.retention_bins),
         sweep_axes=sweep_axes, family=args.family,
         family_axes=family_axes, policy=args.policy,
+        engine=args.engine,
         scheduler=args.scheduler, lease_ttl_s=args.lease_ttl,
         max_retries=args.max_retries)
 

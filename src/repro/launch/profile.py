@@ -118,6 +118,7 @@ _DRY_SEQ = 16
 
 
 def _dry_run(backend: str, policy: str = "refresh-free",
+             engine: str = "numpy",
              csv_out: str | None = None) -> dict:
     """Minimal end-to-end pipeline smoke for CI: tiny built-in workload."""
     session = ProfileSession(backend)
@@ -135,11 +136,12 @@ def _dry_run(backend: str, policy: str = "refresh-free",
         import jax.numpy as jnp
         x = jax.ShapeDtypeStruct((_DRY_SEQ, _DRY_SEQ), jnp.float32)
         session.profile((lambda a: (a @ a).sum(), x))
-    report = session.analyze().compose(policy=policy).report()
+    report = session.analyze().compose(policy=policy,
+                                       engine=engine).report()
     subs = report["subpartitions"]
     events = sum(v["n_reads"] + v["n_writes"] for v in subs.values())
     print(f"dry-run ok: backend={name} subpartitions={sorted(subs)} "
-          f"events={events} policy={policy}")
+          f"events={events} policy={policy} engine={engine}")
     if csv_out:
         _write_composition_csv(session, csv_out)
     return report
@@ -182,6 +184,10 @@ def main(argv=None):
     ap.add_argument("--policy", default="refresh-free",
                     help="assignment policy: refresh-free | refresh-aware"
                          " | bank-quantized[:<base>][@<n_banks>]")
+    ap.add_argument("--engine", default="numpy",
+                    choices=("numpy", "jax"),
+                    help="composition evaluation backend (jax = jitted, "
+                         "~1e-9 relative energy vs the numpy oracle)")
     ap.add_argument("--chunk-events", type=int, default=None,
                     help="stream the trace to the frontend in chunks of "
                          "this many events (bounded-memory analysis)")
@@ -191,7 +197,7 @@ def main(argv=None):
 
     if args.dry_run:
         return _dry_run(args.backend, policy=args.policy,
-                        csv_out=args.csv)
+                        engine=args.engine, csv_out=args.csv)
 
     workload, cfg = build_workload(args.arch, args.backend, seq=args.seq,
                                    smoke=args.smoke)
@@ -202,7 +208,7 @@ def main(argv=None):
         cfg["chunk_events"] = args.chunk_events
     session = ProfileSession(args.backend)
     session.profile(workload, **cfg)
-    session.analyze().compose(policy=args.policy)
+    session.analyze().compose(policy=args.policy, engine=args.engine)
     return _summarize(session, args.out, args.csv)
 
 

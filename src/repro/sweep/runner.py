@@ -144,13 +144,16 @@ def evaluate_candidates(
     raw=None,
     clock_hz: float = 1.0e9,
     policy="refresh-free",
+    engine="numpy",
 ) -> list:
     """``[compose(stats, raw, c.devices, clock_hz, policy) for c in
     candidates]`` with the candidate loop batched by the shared engine
     (:func:`repro.compose.engine.evaluate`) — identical results, one
-    broadcast."""
+    broadcast.  ``engine="jax"`` runs the jitted evaluation backend
+    (~1e-9 relative energy vs the NumPy oracle)."""
     return _engine_evaluate([c.devices for c in candidates], stats,
-                            raw=raw, clock_hz=clock_hz, policy=policy)
+                            raw=raw, clock_hz=clock_hz, policy=policy,
+                            engine=engine)
 
 
 # ---------------------------------------------------------------------------
@@ -161,17 +164,20 @@ class SweepRunner:
     """Evaluate a ``DeviceGrid`` over subpartitions (x cache geometries).
 
     ``policy=`` selects the assignment policy for every evaluated
-    candidate.  ``workers > 1`` thread-parallelizes the outer
-    (subpartition / geometry) loop; results are returned in
+    candidate; ``engine=`` the evaluation backend (``"numpy"`` oracle
+    or jitted ``"jax"``).  ``workers > 1`` thread-parallelizes the
+    outer (subpartition / geometry) loop; results are returned in
     deterministic submission order regardless of completion order.
     """
 
     def __init__(self, grid: DeviceGrid | None = None, *,
-                 workers: int = 1, policy="refresh-free"):
+                 workers: int = 1, policy="refresh-free",
+                 engine="numpy"):
         from repro.compose import get_policy
         self.grid = grid if grid is not None else DeviceGrid()
         self.workers = max(1, int(workers))
         self.policy = get_policy(policy)
+        self.engine = engine
 
     # -- one subpartition ------------------------------------------------
     def run_stats(self, stats: SubpartitionStats, raw=None, *,
@@ -180,7 +186,8 @@ class SweepRunner:
                   geometry: str | None = None) -> list:
         cands = self.grid.candidates()
         comps = evaluate_candidates(cands, stats, raw=raw,
-                                    clock_hz=clock_hz, policy=self.policy)
+                                    clock_hz=clock_hz, policy=self.policy,
+                                    engine=self.engine)
         name = subpartition if subpartition is not None else stats.name
         return [SweepPoint(candidate=c.cid, subpartition=name,
                            composition=comp, params=c.params,

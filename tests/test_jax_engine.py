@@ -1,0 +1,159 @@
+"""Differential oracle: the jitted jax composition engine vs the NumPy
+seed path.
+
+Contract (see ``repro/compose/jax_engine.py``): capacity fractions and
+bank quantization are **bit-identical** (the knife-edge reductions are
+finished on the host with the oracle's exact arithmetic); energy agrees
+within 1e-9 relative (float64 graph, different-but-stable summation
+order).  The NumPy engine itself stays bit-for-bit against the frozen
+seed (``tests/test_compose_policies.py``), so these tests anchor the
+jax engine transitively to the seed too.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.compose import evaluate
+from repro.core.frontend import SubpartitionStats
+from repro.sweep import DeviceGrid
+
+POLICIES = ("refresh-free", "refresh-aware", "bank-quantized")
+CLOCK_HZ = 1.0e9
+
+
+@dataclasses.dataclass
+class _Raw:
+    """compose(raw=...) duck type: per-lifetime address/cycle arrays."""
+    lifetime_cycles: np.ndarray
+    addr: np.ndarray
+    valid: np.ndarray
+
+
+def _synthetic(n=4000, seed=0, n_addr=311):
+    """SubpartitionStats + raw with a lognormal lifetime spread crossing
+    the gain-cell retentions (mirrors the composer-bench workload)."""
+    rng = np.random.RandomState(seed)
+    lt_cycles = rng.lognormal(mean=6.5, sigma=2.0, size=n).astype(np.int64)
+    addr = rng.randint(0, n_addr, n).astype(np.int64)
+    reads = rng.poisson(3.0, n).astype(np.float64)
+    dur = float(lt_cycles.max()) / CLOCK_HZ
+    block_bits = 256
+    stats = SubpartitionStats(
+        name="syn", n_reads=int(reads.sum()), n_writes=n,
+        n_unique_addrs=len(np.unique(addr)), duration_s=dur,
+        write_freq_hz=n / dur, read_freq_hz=float(reads.sum()) / dur,
+        lifetimes_s=lt_cycles / CLOCK_HZ,
+        lifetime_bits=np.full(n, block_bits, np.float64),
+        accesses_per_lifetime=reads + 1.0,
+        orphan_fraction=0.0, block_bits=block_bits)
+    return stats, _Raw(lifetime_cycles=lt_cycles, addr=addr,
+                       valid=np.ones(n, bool))
+
+
+def _grid_candidates(mixes=(0.0, 0.5, 1.0), retention_scales=(0.5, 1, 2),
+                     **kw):
+    grid = DeviceGrid(mixes=mixes, retention_scales=retention_scales,
+                      per_mix=True, **kw)
+    return [c.devices for c in grid.candidates()]
+
+
+def _assert_engines_agree(cands, stats, raw, policy):
+    ref = evaluate(cands, stats, raw=raw, clock_hz=CLOCK_HZ,
+                   policy=policy)
+    got = evaluate(cands, stats, raw=raw, clock_hz=CLOCK_HZ,
+                   policy=policy, engine="jax")
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        assert abs(a.energy_j - b.energy_j) <= 1e-9 * abs(a.energy_j), \
+            (policy, a.energy_j, b.energy_j)
+        # bit-identical, not approx: the quantization knife-edges
+        # (ceil(frac * n_banks)) tolerate zero ulp of drift
+        assert np.array_equal(a.capacity_fractions, b.capacity_fractions)
+        assert a.quantization == b.quantization
+        assert a.devices == b.devices
+        assert a.policy == b.policy
+
+
+# ---------------------------------------------------------------------------
+# randomized differential oracle, all three policies
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", POLICIES)
+@pytest.mark.parametrize("seed,n,n_addr", [(0, 4000, 311), (1, 997, 13),
+                                           (2, 2500, 77)])
+def test_jax_matches_numpy_grouped(policy, seed, n, n_addr):
+    stats, raw = _synthetic(n=n, seed=seed, n_addr=n_addr)
+    _assert_engines_agree(_grid_candidates(), stats, raw, policy)
+
+
+@pytest.mark.parametrize("policy", POLICIES)
+def test_jax_matches_numpy_ungrouped(policy):
+    """No raw lifetimes -> the mean-lifetime fallback path (first-fit
+    picks reduced on the host with the oracle's exact masked sums)."""
+    stats, _ = _synthetic(seed=4)
+    _assert_engines_agree(_grid_candidates(), stats, None, policy)
+
+
+def test_jax_matches_numpy_random_grids():
+    """Randomized device grids: scales drawn per-trial, both engines
+    must stay locked across the whole candidate set."""
+    rng = np.random.RandomState(11)
+    stats, raw = _synthetic(seed=11)
+    for trial in range(4):
+        cands = _grid_candidates(
+            mixes=tuple(np.round(rng.uniform(0, 1, 2), 3)),
+            retention_scales=tuple(np.round(rng.uniform(0.3, 4, 2), 3)),
+            area_scales=(float(np.round(rng.uniform(0.5, 2), 3)),),
+            energy_scales=(float(np.round(rng.uniform(0.5, 2), 3)),))
+        for policy in POLICIES:
+            _assert_engines_agree(cands, stats, raw, policy)
+
+
+def test_jax_matches_numpy_asymmetric_sot_mram():
+    """Mixed SRAM + gain-cell + SOT-MRAM set: read_fj != write_fj
+    exercises the per-operation billing seam symmetric grids never
+    touch."""
+    from repro.devices import get_device_family
+    asym = (get_device_family("sram-gaincell-default").build()
+            + get_device_family("sot-mram").build()[1:])
+    stats, raw = _synthetic(seed=7)
+    for policy in POLICIES:
+        _assert_engines_agree([asym, asym], stats, raw, policy)
+
+
+def test_jax_engine_validation():
+    stats, raw = _synthetic(n=50, seed=9, n_addr=7)
+    cands = _grid_candidates(mixes=(0.5,), retention_scales=(1.0,))
+    with pytest.raises(ValueError, match="engine"):
+        evaluate(cands, stats, raw=raw, clock_hz=CLOCK_HZ,
+                 engine="cuda")
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property (slow): 1e-9 relative energy on random grids
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_property_engines_agree_on_random_grids():
+    hypothesis = pytest.importorskip(
+        "hypothesis",
+        reason="property tests need hypothesis (pip install -r "
+               "requirements-dev.txt)")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=20, deadline=None)
+    @given(st.integers(0, 2 ** 16),
+           st.floats(0.0, 1.0), st.floats(0.25, 4.0),
+           st.floats(0.5, 2.0), st.booleans())
+    def prop(seed, mix, ret_scale, e_scale, use_raw):
+        stats, raw = _synthetic(n=600, seed=seed % 50, n_addr=23)
+        cands = _grid_candidates(mixes=(round(mix, 4),),
+                                 retention_scales=(round(ret_scale, 4),),
+                                 energy_scales=(round(e_scale, 4),))
+        for policy in POLICIES:
+            _assert_engines_agree(cands, stats, raw if use_raw else None,
+                                  policy)
+
+    prop()

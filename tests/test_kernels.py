@@ -165,6 +165,67 @@ def test_lifetime_kernel_block_size_invariance():
     np.testing.assert_allclose(np.asarray(s1)[:6], np.asarray(s2)[:6])
 
 
+def test_lifetime_kernel_int64_matches_oracle():
+    """Acceptance: a trace with time_cycles >= 2**40 runs on the kernel
+    path (split int32 limbs) without KernelRangeError, and its histogram
+    matches the int64 jnp frontend exactly.  Counts are exact too; the
+    f32 sum/max stats aggregates carry f32 rounding at this magnitude."""
+    rng = np.random.RandomState(11)
+    n = 2000
+    t = np.sort(rng.randint(0, 2 ** 41, n).astype(np.int64)) + 2 ** 40
+    a = rng.randint(0, 97, n).astype(np.int64)
+    w = (rng.rand(n) < 0.35).astype(np.int64)
+    edges = default_edges(24, 1, 1e13)
+    h_k, s_k = lifetime_histogram(t, a, w, edges)
+    h_r, s_r = lifetime_hist_reference(t, a, w, edges)
+    np.testing.assert_array_equal(np.asarray(h_k), h_r)
+    np.testing.assert_array_equal(np.asarray(s_k)[:2], s_r[:2])
+    np.testing.assert_array_equal(np.asarray(s_k)[4:6], s_r[4:6])
+    np.testing.assert_allclose(np.asarray(s_k)[2:4], s_r[2:4], rtol=1e-4)
+
+
+def test_lifetime_kernel_rebase_invariance():
+    """Lifetimes are differences: shifting every stamp past 2**40 must
+    reproduce the base trace's histogram and stats bit-for-bit (the
+    wrapper rebases to the trace minimum before limb-splitting)."""
+    rng = np.random.RandomState(5)
+    n = 500
+    t = np.sort(rng.randint(0, 100_000, n).astype(np.int64))
+    a = rng.randint(0, 16, n).astype(np.int64)
+    w = (rng.rand(n) < 0.4).astype(np.int64)
+    edges = default_edges(16, 1, 1e6)
+    hb, sb = lifetime_histogram(t, a, w, edges)
+    hs, ss = lifetime_histogram(t + 2 ** 40 + 12345, a, w, edges)
+    np.testing.assert_array_equal(np.asarray(hb), np.asarray(hs))
+    np.testing.assert_allclose(np.asarray(sb), np.asarray(ss))
+
+
+def test_lifetime_edges_exact_past_2pow24():
+    """Regression (f32 edge precision): a bin edge just past 2**24 is
+    unrepresentable in f32 — lifetimes of exactly 2**24 and 2**24 + 1
+    cycles must land in different bins, which f32 edges cannot separate.
+    default_edges therefore computes in float64 and the kernel boundary
+    converts to exact integer thresholds."""
+    assert default_edges().dtype == np.float64
+    boundary = 2 ** 24 + 1
+    # f32 would collapse the edge onto 2**24 (the regression is real)
+    assert float(np.float32(boundary)) == float(2 ** 24)
+    edges = np.array([0.0, boundary, np.inf], np.float64)
+    # two lifetimes: one of 2**24 cycles (below the edge), one of
+    # 2**24 + 1 (at the edge, so in the upper bin)
+    t = np.array([0, 2 ** 24, 10, 10 + boundary], np.int64)
+    a = np.array([1, 1, 2, 2], np.int64)
+    w = np.array([1, 0, 1, 0], np.int64)
+    hist, stats = lifetime_histogram(t, a, w, edges)
+    np.testing.assert_array_equal(np.asarray(hist), [1.0, 1.0])
+    with_f32_edges = ((np.array([2 ** 24, boundary], np.float64)
+                       [:, None] >= np.float32(edges)[None, :-1])
+                      & (np.array([2 ** 24, boundary], np.float64)
+                         [:, None] < np.float32(edges)[None, 1:]))
+    # sanity: binning against f32-cast edges would put both in one bin
+    assert with_f32_edges[:, 1].all()
+
+
 # ---------------------------------------------------------------------------
 # flash attention backward (Pallas FA-2 two-pass)
 # ---------------------------------------------------------------------------
