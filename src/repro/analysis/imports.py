@@ -30,12 +30,23 @@ RULE_ID = "import-purity"
 class ImportContract:
     """One declared contract: ``module`` (and its submodules when
     ``recursive``) must not transitively import any ``banned``
-    top-level external package at import time."""
+    top-level external package at import time.
+
+    ``exempt`` names submodules excluded from the contract — the
+    designated lazy-import backends (e.g. the jax engine modules under
+    ``repro.compose``).  Exemption is *shallow*: an exempt module may
+    import the banned package itself, but any covered module that
+    imports an exempt module at module level still reaches the banned
+    package through it and is flagged — the analyzer proves the exempt
+    modules are only ever imported lazily."""
     module: str
     banned: tuple
     recursive: bool = False
+    exempt: tuple = ()
 
     def covers(self, module: str) -> bool:
+        if module in self.exempt:
+            return False
         return module == self.module or (
             self.recursive and module.startswith(self.module + "."))
 
@@ -49,11 +60,14 @@ DEFAULT_CONTRACTS = (
     ImportContract("repro.cluster", ("jax", "numpy"), recursive=True),
     ImportContract("repro.analysis", ("jax", "numpy"), recursive=True),
     ImportContract("repro.launch.campaign", ("jax", "numpy")),
-    # non-recursive on purpose: repro.compose.jax_engine is the one
-    # compose module allowed to import jax at import time (the engine
-    # package lazy-imports it only when engine="jax" is requested)
-    ImportContract("repro.compose", ("jax",)),
-    ImportContract("repro.compose.policies", ("jax",)),
+    # recursive with the jax engine modules exempted: jax_engine and
+    # executor are the only compose modules allowed to import jax at
+    # import time (the engine package lazy-imports them only when
+    # engine="jax" is requested); everything else — policies, engine,
+    # types, the package itself — stays jax-free at import
+    ImportContract("repro.compose", ("jax",), recursive=True,
+                   exempt=("repro.compose.jax_engine",
+                           "repro.compose.executor")),
     ImportContract("repro.__main__", ("jax", "numpy")),
 )
 

@@ -60,7 +60,8 @@ def runner_from_manifest(manifest: dict, store_dir: str):
         family_axes=manifest.get("family_axes"),
         devices=manifest.get("devices"),
         policy=manifest.get("policy", "refresh-free"),
-        engine=manifest.get("engine", "numpy"))
+        engine=manifest.get("engine", "numpy"),
+        compile_cache=manifest.get("compile_cache"))
 
 
 class _Heartbeat:

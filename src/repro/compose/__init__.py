@@ -30,7 +30,8 @@ from repro.compose.policies import (AddressGroups, AssignmentPolicy,
 from repro.compose.types import Composition
 
 _ENGINE_EXPORTS = ("evaluate", "compose", "composition_csv_rows",
-                   "address_groups")
+                   "address_groups", "sorted_trace_view",
+                   "configure_compile_cache", "compile_stats")
 
 __all__ = [
     "AddressGroups", "AssignmentPolicy", "BankQuantizedPolicy",

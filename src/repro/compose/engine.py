@@ -36,14 +36,22 @@ the seed implementation).
 
 Engines: ``evaluate(..., engine="numpy")`` (default) runs the policy
 kernels + reductions here in NumPy and carries the bit-for-bit seed
-guarantee above; ``engine="jax"`` dispatches each candidate chunk to
-the fused jitted kernels in :mod:`repro.compose.jax_engine` (imported
-lazily — this module stays jax-free), which agree with the NumPy
-oracle to ~1e-9 relative energy (``tests/test_jax_engine.py``).
+guarantee above; ``engine="jax"`` hands the *whole* candidate batch to
+the fused bucketed executor in :mod:`repro.compose.executor` (imported
+lazily — this module stays jax-free), which keeps the trace state
+device-resident across calls (see :func:`sorted_trace_view`) and
+agrees with the NumPy oracle bit-identically on capacity and to ~1e-9
+relative energy (``tests/test_jax_engine.py``,
+``tests/test_executor.py``).  :func:`configure_compile_cache` points
+jax's persistent compilation cache at a shared directory (campaign
+workers warm-start from it) and :func:`compile_stats` reports compile
+telemetry — both are safe to call without jax installed until a cache
+path is actually configured.
 """
 
 from __future__ import annotations
 
+import dataclasses
 import math
 import weakref
 from typing import Mapping, Sequence
@@ -53,8 +61,15 @@ import numpy as np
 from repro.compose.policies import (AddressGroups, AssignmentPolicy,
                                     PolicyBatch, get_policy)
 from repro.compose.types import Composition
-from repro.core.devices import DEFAULT_DEVICES, DeviceModel
-from repro.core.frontend import SubpartitionStats, analyze_energy
+# repro.core is imported lazily (function scope): executing its package
+# __init__ pulls the jax-backed lifetime stack, and this module is part
+# of the repro.compose jax-free-at-import contract (`repro check`
+# import-purity) so campaign planning can resolve it cheaply.
+from typing import TYPE_CHECKING
+
+if TYPE_CHECKING:
+    from repro.core.devices import DeviceModel
+    from repro.core.frontend import SubpartitionStats
 
 # Cap on one candidate-chunk broadcast: chunk x devices x lifetimes
 # elements at the policy's item size.  256 MB keeps the matrices
@@ -117,6 +132,125 @@ def _per_address_max_lifetime_s(raw, clock_hz: float) -> np.ndarray:
     return address_groups(raw, clock_hz).max_lt_s
 
 
+@dataclasses.dataclass(frozen=True)
+class TraceView:
+    """Host-side sorted twins of one subpartition's trace arrays — every
+    permutation and prefix sum the engines need, computed once per
+    ``(stats, raw)`` pair (see :func:`sorted_trace_view`).
+
+    Value-sorted side (refresh-free interval arithmetic): ``lt_sorted``
+    plus ``[n_lt + 1]`` prefix sums of bits and read·bits in lifetime
+    order, accumulated in ``np.longdouble`` and rounded once to float64
+    so any prefix *difference* matches a direct float64 sum to ~1e-16
+    relative.  Address-sorted side (refresh-aware segment reductions):
+    the lifetime arrays gathered through ``groups.order`` with dense
+    segment ids, and each address's max lifetime value-sorted for the
+    capacity searchsorted.  Address fields are ``None`` when built with
+    ``raw=None``.
+    """
+    n_lt: int
+    n_addr: int
+    lt_sorted: np.ndarray
+    prefix_bits: np.ndarray
+    prefix_read_bits: np.ndarray
+    maxlt_sorted: np.ndarray | None
+    lt_addr: np.ndarray | None
+    reads_addr: np.ndarray | None
+    bits_addr: np.ndarray | None
+    seg: np.ndarray | None
+
+
+def _build_trace_view(stats: SubpartitionStats, raw,
+                      clock_hz: float) -> TraceView:
+    """The one host pre-sort per ``(stats, raw)`` pair (spied on by
+    ``tests/test_executor.py`` to prove the sweep never re-sorts)."""
+    lt = stats.lifetimes_s
+    bits = stats.lifetime_bits
+    reads = stats.accesses_per_lifetime - 1.0
+    n_lt = len(lt)
+    order = np.argsort(lt, kind="stable")
+
+    def prefix(a: np.ndarray) -> np.ndarray:
+        p = np.zeros(n_lt + 1, np.longdouble)
+        np.cumsum(a[order].astype(np.longdouble), out=p[1:])
+        return p.astype(np.float64)
+
+    maxlt_sorted = lt_addr = reads_addr = bits_addr = seg = None
+    n_addr = 0
+    if raw is not None:
+        groups = address_groups(raw, clock_hz)
+        n_addr = len(groups.max_lt_s)
+        maxlt_sorted = np.sort(groups.max_lt_s, kind="stable")
+        g_order = np.asarray(groups.order)
+        lt_addr = lt[g_order]
+        reads_addr = reads[g_order]
+        bits_addr = bits[g_order]
+        seg = np.zeros(n_lt, np.int32)
+        seg[np.asarray(groups.starts)[1:]] = 1  # starts[0] == 0: segment 0
+        seg = np.cumsum(seg, dtype=np.int32)
+    return TraceView(
+        n_lt=n_lt, n_addr=n_addr, lt_sorted=lt[order],
+        prefix_bits=prefix(bits), prefix_read_bits=prefix(reads * bits),
+        maxlt_sorted=maxlt_sorted, lt_addr=lt_addr,
+        reads_addr=reads_addr, bits_addr=bits_addr, seg=seg)
+
+
+# Memo for sorted_trace_view: (id(stats), id(raw)) -> (weakref(stats),
+# weakref(raw) | None, clock_hz, view) — the trace-view twin of
+# _groups_memo, extending the numpy-side memoization to everything the
+# jax executor keeps device-resident.  Keyed by identity only: the
+# view is a pure function of the trace and the clock, so ``engine``,
+# policy, and bucketing deliberately stay out of the key — every
+# engine shares one view, and the executor buckets *around* it.
+_view_memo: dict = {}
+
+
+def sorted_trace_view(stats: SubpartitionStats, raw,
+                      clock_hz: float = 1.0e9) -> TraceView:
+    """Memoized :class:`TraceView` for a ``(stats, raw)`` pair: the
+    host pre-sort is done once per subpartition and reused across every
+    candidate batch, policy, geometry, and engine.  Weakrefs guard id
+    reuse and evict the entry (and with it the executor's device-
+    resident twin) when the stats object is collected."""
+    key = (id(stats), id(raw))
+    hit = _view_memo.get(key)
+    if (hit is not None and hit[0]() is stats
+            and (hit[1] is None or hit[1]() is raw)
+            and hit[2] == clock_hz):
+        return hit[3]
+    view = _build_trace_view(stats, raw, clock_hz)
+    try:
+        cb = lambda _, k=key: _view_memo.pop(k, None)  # noqa: E731
+        sref = weakref.ref(stats, cb)
+        rref = weakref.ref(raw, cb) if raw is not None else None
+        _view_memo[key] = (sref, rref, clock_hz, view)
+    except TypeError:
+        pass          # stats/raw not weakref-able: skip the memo
+    return view
+
+
+def configure_compile_cache(path: str) -> str:
+    """Point jax's persistent compilation cache at ``path`` so later
+    ``engine="jax"`` compiles are written there and warm-started from
+    it (campaigns pass ``<cache_dir>/jax-cache`` inside the shared
+    artifact store).  Imports jax — only call when the jax engine is
+    actually in play."""
+    from repro.compose import executor  # lazy: keeps this module jax-free
+    return executor.configure_compilation_cache(path)
+
+
+def compile_stats() -> dict:
+    """Jax compile telemetry (jit entries, persistent-cache hits and
+    misses) for campaign job rows.  Jax-free until the executor has
+    actually been imported: reports zeros otherwise."""
+    import sys
+    if "repro.compose.executor" not in sys.modules:
+        return {"jit_entries": 0, "persistent_cache_hits": 0,
+                "persistent_cache_misses": 0, "cache_dir": None}
+    from repro.compose import executor
+    return executor.compile_stats()
+
+
 def _area_accounting(
     devs: Sequence[DeviceModel],
     frac: np.ndarray,
@@ -166,6 +300,7 @@ def _empty_composition(stats: SubpartitionStats, devs: list,
     frac = np.zeros(len(devs))
     frac[-1] = 1.0
     frac, quant = pol.capacity(frac, devs)
+    from repro.core.frontend import analyze_energy
     mono = {d.name: analyze_energy(stats, d)[0] for d in device_set}
     sram_e = mono["SRAM"]
     area_um2, area_ratio = _area_accounting(devs, frac, stats.capacity_bits)
@@ -243,7 +378,6 @@ def evaluate(
         raise ValueError(
             f"engine must be 'numpy' or 'jax', got {engine!r}")
     pol = get_policy(policy)
-    jax_engine = None
     if engine == "jax":
         from repro.compose import jax_engine  # lazy: keeps this module jax-free
         if not jax_engine.supports(pol):
@@ -273,6 +407,7 @@ def evaluate(
 
     # Monolithic baselines depend on (stats, device); memoized by device
     # — SRAM is shared by every candidate, scale variants recur.
+    from repro.core.frontend import analyze_energy
     mono_cache: dict = {}
 
     def mono_energy(d: DeviceModel) -> float:
@@ -296,26 +431,40 @@ def evaluate(
     pad = np.arange(d_max)[None, :] >= n_dev[:, None]
     fallback = (n_dev - 1)[:, None]
 
+    e_all = f_all = None
+    if engine == "jax":
+        # The fused executor takes the whole grid at once: it buckets
+        # candidates internally (vmapped batches / fixed slabs), reuses
+        # the memoized trace view's device-resident twin, and returns
+        # the full [C] energy / [C, D] fraction arrays — the chunk loop
+        # below only runs the host epilogue.
+        from repro.compose import executor  # lazy: keeps this module jax-free
+        view = sorted_trace_view(stats, raw, clock_hz)
+        full = PolicyBatch(
+            devs=tuple(sorted_devs), ret_s=ret, read_fj=read_fj,
+            write_fj=write_fj, pad=pad, fallback=fallback,
+            lt_s=lt, reads=reads, bits=bits, groups=groups)
+        e_all, f_all = executor.run_batch(pol, full, view)
+
     chunk = max(1, _MAX_BROADCAST_BYTES
                 // max(1, d_max * len(lt) * pol.broadcast_itemsize))
     out = []
     for lo in range(0, len(sets), chunk):
         hi = min(lo + chunk, len(sets))
-        batch = PolicyBatch(
-            devs=tuple(sorted_devs[lo:hi]), ret_s=ret[lo:hi],
-            read_fj=read_fj[lo:hi], write_fj=write_fj[lo:hi],
-            pad=pad[lo:hi], fallback=fallback[lo:hi],
-            lt_s=lt, reads=reads, bits=bits, groups=groups)
-        if jax_engine is not None:
-            e_chunk, f_chunk = jax_engine.run_chunk(pol, batch)
+        if e_all is not None:
             asg = None
         else:
+            batch = PolicyBatch(
+                devs=tuple(sorted_devs[lo:hi]), ret_s=ret[lo:hi],
+                read_fj=read_fj[lo:hi], write_fj=write_fj[lo:hi],
+                pad=pad[lo:hi], fallback=fallback[lo:hi],
+                lt_s=lt, reads=reads, bits=bits, groups=groups)
             asg = pol.assign(batch)
         for ci in range(lo, hi):
             devs, dset = sorted_devs[ci], sets[ci]
             if asg is None:
-                energy = float(e_chunk[ci - lo])
-                frac = f_chunk[ci - lo, :len(devs)].copy()
+                energy = float(e_all[ci])
+                frac = f_all[ci, :len(devs)].copy()
             else:
                 energy, frac = _numpy_candidate(
                     asg, ci - lo, devs, reads, bits, w)
@@ -341,13 +490,17 @@ def evaluate(
 def compose(
     stats: SubpartitionStats,
     raw=None,
-    devices: Sequence[DeviceModel] = DEFAULT_DEVICES,
+    devices: Sequence[DeviceModel] | None = None,
     clock_hz: float = 1.0e9,
     policy: AssignmentPolicy | str = "refresh-free",
     engine: str = "numpy",
 ) -> Composition:
     """Derive the composition for one subpartition under one policy —
-    the single-candidate entry into :func:`evaluate`."""
+    the single-candidate entry into :func:`evaluate`.  ``devices=None``
+    (the default) uses ``repro.core.devices.DEFAULT_DEVICES``."""
+    if devices is None:
+        from repro.core.devices import DEFAULT_DEVICES
+        devices = DEFAULT_DEVICES
     (comp,) = evaluate([tuple(devices)], stats, raw=raw,
                        clock_hz=clock_hz, policy=policy, engine=engine)
     return comp

@@ -30,9 +30,20 @@ matters.
 Buffer protocol: the per-chunk [C, D] retention matrix is donated to
 the jit (it is freshly built per chunk, never reused, and aliases the
 same-shaped fraction output); the per-subpartition [L]/[A] arrays
-(lifetimes, reads, bits, grouping) are shared across chunks.  First
-call per (C, D, L, A) shape pays jit compilation; steady-state sweep
-shapes hit the trace cache (see the jit-warmup note in docs/API.md).
+(lifetimes, reads, bits, grouping) are shared across chunks.  Because
+donation invalidates the input buffer the moment the call is traced,
+dispatch is serialized on :data:`_DISPATCH_LOCK` — two
+``SweepRunner(workers>1)`` threads racing into the same jit must not
+interleave donate/execute (``tests/test_executor.py`` locks 4-thread
+vs serial bit-for-bit).  First call per (C, D, L, A) shape pays jit
+compilation; steady-state sweep shapes hit the trace cache (see the
+jit-warmup note in docs/API.md).
+
+This per-chunk path is kept as the differential yardstick (and for
+callers holding a single ``PolicyBatch``); ``evaluate(...,
+engine="jax")`` itself now routes whole batches through the fused
+bucketed executor in :mod:`repro.compose.executor`, which reuses this
+module's host-side reductions and the same dispatch lock.
 
 Import contract: this module imports jax at module level and is
 deliberately OUTSIDE every stdlib-only / jax-free import surface
@@ -43,6 +54,7 @@ from inside :func:`repro.compose.engine.evaluate`.
 from __future__ import annotations
 
 import functools
+import threading
 
 import jax
 import jax.numpy as jnp
@@ -53,6 +65,14 @@ from repro.compose.policies import (BankQuantizedPolicy, PolicyBatch,
                                     RefreshAwarePolicy, RefreshFreePolicy)
 
 _F64 = np.float64
+
+# Serializes every jax dispatch (per-chunk and fused executor alike):
+# the grouped kernels donate their [C, D] input buffer, and a racing
+# thread re-dispatching into the same jit while another call is in
+# flight could observe the donated (already invalidated) buffer.  The
+# lock also guards the executor's device-residence memo.  NumPy-engine
+# sweeps are unaffected — they never enter this module.
+_DISPATCH_LOCK = threading.Lock()
 
 
 # ---------------------------------------------------------------------------
@@ -217,7 +237,7 @@ def run_chunk(pol, batch: PolicyBatch):
         raise ValueError(
             f"engine='jax' has no fused kernel for policy "
             f"{base.name!r}; use engine='numpy'")
-    with enable_x64():
+    with _DISPATCH_LOCK, enable_x64():
         ret = jnp.asarray(batch.ret_s, _F64)
         read_fj = jnp.asarray(batch.read_fj, _F64)
         write_fj = jnp.asarray(batch.write_fj, _F64)

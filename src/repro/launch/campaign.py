@@ -195,6 +195,13 @@ class CampaignRunner:
         energy).  Deliberately *not* a cache-key component: both
         engines produce the same artifacts within tolerance, so cached
         results are reusable across engines.
+    compile_cache : persistent jax compilation-cache directory shared
+        by every job (and worker process) of the campaign.  Defaults to
+        ``<cache_dir>/jax-cache`` when ``engine="jax"`` and a cache/
+        store directory exists, so process workers warm-start from each
+        other's compiles; ignored under ``engine="numpy"``.  Like
+        ``engine`` it stays out of the cache key — compiled code never
+        changes results.
     scheduler : ``"thread"`` (in-process pool, the PR-4 path kept
         bit-for-bit) or ``"process"`` (lease-based worker processes
         over a shared artifact store — see ``repro.cluster``).
@@ -221,6 +228,7 @@ class CampaignRunner:
                  devices: Sequence[str] | None = None,
                  policy: str = "refresh-free",
                  engine: str = "numpy",
+                 compile_cache: str | None = None,
                  scheduler: str = "thread",
                  lease_ttl_s: float = 30.0,
                  max_retries: int = 3):
@@ -237,6 +245,10 @@ class CampaignRunner:
                 else backends)))
         self.jobs = max(1, int(jobs))
         self.cache_dir = cache_dir
+        self.compile_cache = compile_cache
+        if (self.compile_cache is None and self.engine == "jax"
+                and self.cache_dir):
+            self.compile_cache = os.path.join(self.cache_dir, "jax-cache")
         self.seq = seq
         self.params = {k: dict(v) for k, v in (params or {}).items()}
         self.backend_cfg = {canonical_backend(k): dict(v)
@@ -338,10 +350,17 @@ class CampaignRunner:
         """Run one (workload, backend) cell through the full pipeline
         and shape the cacheable artifact."""
         from repro.core import ProfileSession
+        before = None
+        if self.engine == "jax":
+            from repro.compose import engine as compose_engine
+            if self.compile_cache:
+                compose_engine.configure_compile_cache(self.compile_cache)
+            before = compose_engine.compile_stats()
         spec = self._spec_for(job.workload)
         workload, cfg = spec.build(job.backend)
         cfg = {**cfg, **dict(job.cfg)}
-        session = ProfileSession(job.backend, devices=self.devices)
+        session = ProfileSession(job.backend, devices=self.devices,
+                                 compile_cache=self.compile_cache)
         session.profile(workload, **cfg).analyze()
         session.compose(policy=self.policy, engine=self.engine)
         report = session.report()
@@ -374,13 +393,29 @@ class CampaignRunner:
                  "energy_vs_sram": float(p.energy_vs_sram)}
                 for p in result.points]
 
-        return {"schema": SCHEMA_VERSION, "key": job.key,
-                "workload": job.workload, "backend": job.backend,
-                "params": dict(job.params), "cfg": dict(job.cfg),
-                "policy": self.policy,
-                "report": report, "accesses": accesses,
-                "short_lived": short_lived,
-                "sweep_points": sweep_points}
+        artifact = {"schema": SCHEMA_VERSION, "key": job.key,
+                    "workload": job.workload, "backend": job.backend,
+                    "params": dict(job.params), "cfg": dict(job.cfg),
+                    "policy": self.policy,
+                    "report": report, "accesses": accesses,
+                    "short_lived": short_lived,
+                    "sweep_points": sweep_points}
+        if before is not None:
+            from repro.compose import engine as compose_engine
+            after = compose_engine.compile_stats()
+            artifact["compile_telemetry"] = {
+                "new_compiles": (after["jit_entries"]
+                                 - before["jit_entries"]),
+                "jit_entries": after["jit_entries"],
+                "persistent_cache_hits": (
+                    after["persistent_cache_hits"]
+                    - before["persistent_cache_hits"]),
+                "persistent_cache_misses": (
+                    after["persistent_cache_misses"]
+                    - before["persistent_cache_misses"]),
+                "warm": after["jit_entries"] == before["jit_entries"],
+                "cache_dir": after["cache_dir"]}
+        return artifact
 
     def job_for_key(self, key: str) -> CampaignJob:
         """The planned job with this cache key (workers rebuild jobs
@@ -473,6 +508,7 @@ class CampaignRunner:
                 "devices": list(self.devices) if self.devices else None,
                 "policy": self.policy,
                 "engine": self.engine,
+                "compile_cache": self.compile_cache,
                 "lease_ttl_s": self.lease_ttl_s,
                 "max_retries": self.max_retries}
 
@@ -486,6 +522,9 @@ class CampaignRunner:
         from repro.runtime.fault_tolerance import RetryPolicy
         if not self.cache_dir:
             self.cache_dir = tempfile.mkdtemp(prefix="gainsight-campaign-")
+            if self.compile_cache is None and self.engine == "jax":
+                self.compile_cache = os.path.join(self.cache_dir,
+                                                  "jax-cache")
         store = ArtifactStore(self.cache_dir)
         store.write_manifest(self.manifest())
         ledger = JobLedger(
@@ -635,6 +674,10 @@ class CampaignRunner:
                 row["error"] = e
             if job_metrics and j.key in job_metrics:
                 row["metrics"] = job_metrics[j.key]
+            if a and "compile_telemetry" in a:
+                # jax engine only: jit compiles this job paid (0 ==
+                # fully warm) + persistent-cache hit/miss deltas
+                row["compile_telemetry"] = a["compile_telemetry"]
             job_rows.append(row)
 
         campaign = {
@@ -824,6 +867,10 @@ def main(argv=None):
                     help="composition evaluation backend (jax = jitted, "
                          "~1e-9 relative energy; not a cache-key "
                          "component)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent jax compilation cache shared by "
+                         "every job/worker (--engine jax; defaults to "
+                         "<cache-dir>/jax-cache)")
     ap.add_argument("--out", default=None,
                     help="aggregate JSON path (default: "
                          "<cache-dir>/campaign_report.json)")
@@ -861,7 +908,7 @@ def main(argv=None):
         retention_bins=_floats(args.retention_bins),
         sweep_axes=sweep_axes, family=args.family,
         family_axes=family_axes, policy=args.policy,
-        engine=args.engine,
+        engine=args.engine, compile_cache=args.compile_cache,
         scheduler=args.scheduler, lease_ttl_s=args.lease_ttl,
         max_retries=args.max_retries)
 

@@ -132,6 +132,10 @@ def main(argv=None):
                     choices=("numpy", "jax"),
                     help="composition evaluation backend (jax = jitted, "
                          "~1e-9 relative energy vs the numpy oracle)")
+    ap.add_argument("--compile-cache", default=None, metavar="DIR",
+                    help="persistent jax compilation cache (--engine "
+                         "jax): repeated sweeps warm-start their "
+                         "compiles from DIR")
     ap.add_argument("--out", default=None, help="JSON output path")
     ap.add_argument("--csv", default=None, help="CSV output path")
     ap.add_argument("--dry-run", action="store_true",
@@ -140,7 +144,8 @@ def main(argv=None):
 
     grid = _grid_from_args(args)
     runner = SweepRunner(grid, workers=args.workers, policy=args.policy,
-                         engine=args.engine)
+                         engine=args.engine,
+                         compile_cache=args.compile_cache)
     workload, cfg = _workload(args)
     geoms = _geometries(args)
     fam_tag = f" family={grid.family}" if args.family else ""

@@ -133,6 +133,13 @@ class DeviceGrid:
             params={"mixes": tuple(mixes), "retention_scale": r,
                     "area_scale": a, "energy_scale": e})
 
+    def max_devices(self) -> int:
+        """Widest candidate device set in the grid — the ``D`` extent
+        the fused jax executor pads its shape bucket from (see
+        docs/API.md "Fused sweep execution"); also a cheap sizing hint
+        for benches."""
+        return max(len(c.devices) for c in self.candidates())
+
     @classmethod
     def default_point(cls) -> "DeviceGrid":
         """The degenerate 1-point grid: exactly ``DEFAULT_DEVICES``."""
@@ -207,6 +214,12 @@ class FamilyGrid:
                 cid=self._cid(point), devices=fam.build(**point),
                 params={"family": fam.name, **point}))
         return tuple(out)
+
+    def max_devices(self) -> int:
+        """Widest candidate device set in the grid (duck-typed with
+        :meth:`DeviceGrid.max_devices` for the fused executor's shape
+        bucketing)."""
+        return max(len(c.devices) for c in self.candidates())
 
     def _cid(self, point: Mapping) -> str:
         def fmt(v):

@@ -1,0 +1,1 @@
+"""Fixture root: exempted-lazy-backend import-purity mini-tree."""

@@ -1,0 +1,12 @@
+"""Mirrors repro.compose: jax-free at import, engine attributes lazy."""
+
+from repro.compose.policies import get_policy
+
+__all__ = ["get_policy", "evaluate"]
+
+
+def __getattr__(name):
+    if name == "evaluate":
+        from repro.compose import engine
+        return engine.evaluate
+    raise AttributeError(name)

@@ -1,0 +1,13 @@
+"""Covered engine module: only ever imports the jax backends lazily."""
+
+import numpy as np
+
+from repro.compose.policies import get_policy
+
+
+def evaluate(candidates, *, engine="numpy"):
+    pol = get_policy("refresh-free")
+    if engine == "jax":
+        from repro.compose import executor  # lazy: jax stays off-path
+        return executor.run_batch(pol, candidates)
+    return np.zeros(len(candidates))

@@ -1,0 +1,9 @@
+"""Second exempt backend: imports jax directly and via jax_engine."""
+
+import jax.numpy as jnp
+
+from repro.compose.jax_engine import run_chunk
+
+
+def run_batch(pol, batch):
+    return jnp.asarray(run_chunk(pol, batch))

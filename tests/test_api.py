@@ -346,14 +346,21 @@ def test_cli_profile_dry_run():
 
 def test_import_contracts_hold_statically():
     """Analyzer-based replacement for the old subprocess import probes:
-    the default contract set (workloads/cluster recursive, __main__,
-    campaign's dry-run path, compose.policies) holds over the static
-    import graph — every import order, not just the one a subprocess
-    happened to witness."""
+    the default contract set (workloads/cluster/compose recursive,
+    __main__, campaign's dry-run path) holds over the static import
+    graph — every import order, not just the one a subprocess happened
+    to witness."""
     from repro.analysis import AnalysisContext, default_root
     from repro.analysis.imports import DEFAULT_CONTRACTS, ImportPurityRule
     ctx = AnalysisContext(default_root())
     assert ImportPurityRule().run(ctx) == []
     covered = {c.module for c in DEFAULT_CONTRACTS}
     assert {"repro.workloads", "repro.cluster", "repro.launch.campaign",
-            "repro.compose.policies", "repro.__main__"} <= covered
+            "repro.compose", "repro.__main__"} <= covered
+    # the whole compose package is jax-free at import except the two
+    # exempted jitted backends
+    (compose,) = [c for c in DEFAULT_CONTRACTS
+                  if c.module == "repro.compose"]
+    assert compose.recursive
+    assert set(compose.exempt) == {"repro.compose.jax_engine",
+                                   "repro.compose.executor"}

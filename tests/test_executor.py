@@ -1,0 +1,278 @@
+"""Tests for the fused sweep executor (``repro.compose.executor``).
+
+The locked contracts:
+  - the fused bucketed batch path matches the NumPy oracle exactly on
+    capacity fractions and to <=1e-9 relative on energy, for every
+    policy x grouped/ungrouped combination — including trace/address/
+    device/candidate sizes straddling the pow2 bucket boundaries, so
+    masked padding provably never leaks into results;
+  - a second workload whose padded shapes land in the same buckets
+    triggers zero new jit compiles (``compile_stats`` telemetry);
+  - the device-resident trace view is built once per (stats, raw)
+    pair and reused across evaluate() calls;
+  - a 4-thread ``SweepRunner`` on the jax engine is bit-for-bit equal
+    to the serial run (dispatch lock);
+  - a process-scheduler campaign with a shared persistent compile
+    cache reports warm compiles in fresh worker processes.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.compose import compile_stats
+from repro.compose import engine as compose_engine
+from repro.compose.engine import evaluate
+from repro.core.frontend import SubpartitionStats
+from repro.sweep import (SRAM_ONLY_ID, DeviceGrid, FamilyGrid, SweepRunner,
+                         pareto_frontier)
+
+jax = pytest.importorskip("jax")
+
+CLOCK = 1.0e9
+
+
+@dataclasses.dataclass
+class _Raw:
+    lifetime_cycles: np.ndarray
+    addr: np.ndarray
+    valid: np.ndarray
+
+
+def _synth(n=4000, n_addr=311, seed=0, bits=256):
+    rng = np.random.RandomState(seed)
+    lt_cycles = np.maximum(
+        rng.lognormal(mean=6.5, sigma=2.0, size=n), 1.0).astype(np.int64)
+    addr = rng.randint(0, n_addr, n).astype(np.int64)
+    reads = rng.poisson(3.0, n).astype(np.float64)
+    dur = float(lt_cycles.max()) / CLOCK
+    st = SubpartitionStats(
+        name="syn", n_reads=int(reads.sum()), n_writes=n,
+        n_unique_addrs=len(np.unique(addr)), duration_s=dur,
+        write_freq_hz=n / dur, read_freq_hz=float(reads.sum()) / dur,
+        lifetimes_s=lt_cycles / CLOCK,
+        lifetime_bits=np.full(n, bits, np.float64),
+        accesses_per_lifetime=reads + 1.0, orphan_fraction=0.0,
+        block_bits=bits)
+    return st, _Raw(lt_cycles, addr, np.ones(n, bool))
+
+
+def _asym_devices():
+    from repro.devices import get_device_family
+    return (get_device_family("sram-gaincell-default").build()
+            + get_device_family("sot-mram").build()[1:])
+
+
+POLICIES = ("refresh-free", "refresh-aware",
+            "bank-quantized:refresh-free@8")
+
+
+def _assert_matches_oracle(cands, st, raw, policy):
+    ref = evaluate(cands, st, raw=raw, clock_hz=CLOCK, policy=policy)
+    got = evaluate(cands, st, raw=raw, clock_hz=CLOCK, policy=policy,
+                   engine="jax")
+    assert len(ref) == len(got)
+    for a, b in zip(ref, got):
+        assert np.array_equal(a.capacity_fractions, b.capacity_fractions)
+        if a.energy_j > 0:
+            assert abs(a.energy_j - b.energy_j) <= 1e-9 * a.energy_j
+        else:
+            assert b.energy_j == a.energy_j
+
+
+# ---------------------------------------------------------------------------
+# equivalence: every policy x grouped/ungrouped path
+# ---------------------------------------------------------------------------
+
+def test_fused_batch_matches_numpy_oracle_all_paths():
+    st, raw = _synth(n=3000, n_addr=300)
+    grid = DeviceGrid(mixes=(0.0, 0.5, 1.0),
+                      retention_scales=(0.5, 1.0, 2.0), per_mix=True)
+    cands = [c.devices for c in grid.candidates()]
+    for policy in POLICIES:
+        for use_raw in (raw, None):
+            _assert_matches_oracle(cands, st, raw=use_raw, policy=policy)
+
+
+# ---------------------------------------------------------------------------
+# shape buckets: second workload in the same bucket -> zero new compiles
+# ---------------------------------------------------------------------------
+
+def test_same_bucket_workload_triggers_zero_new_compiles():
+    # workload A: n=3000 -> L bucket 4096, n_addr=300 -> A bucket 512
+    st_a, raw_a = _synth(n=3000, n_addr=300, seed=0)
+    grid_a = DeviceGrid(mixes=(0.0, 0.5, 1.0),
+                        retention_scales=(0.5, 2.0), per_mix=True)
+    cands_a = [c.devices for c in grid_a.candidates()]  # 7 -> c_pad 8
+    for policy in POLICIES:
+        for use_raw in (raw_a, None):
+            evaluate(cands_a, st_a, raw=use_raw, clock_hz=CLOCK,
+                     policy=policy, engine="jax")
+    entries = compile_stats()["jit_entries"]
+    assert entries > 0
+
+    # workload B: different trace (n=3500 -> 4096, n_addr=280 -> 512),
+    # different candidate count (5 -> c_pad 8) and a 1-device anchor
+    # (d_pad still 2) — every padded shape lands in workload A's bucket
+    st_b, raw_b = _synth(n=3500, n_addr=280, seed=7)
+    grid_b = DeviceGrid(mixes=(0.25, 0.75),
+                        retention_scales=(0.7, 1.3), per_mix=True)
+    cands_b = [c.devices for c in grid_b.candidates()]
+    assert len(cands_b) != len(cands_a)
+    for policy in POLICIES:
+        for use_raw in (raw_b, None):
+            evaluate(cands_b, st_b, raw=use_raw, clock_hz=CLOCK,
+                     policy=policy, engine="jax")
+    assert compile_stats()["jit_entries"] == entries
+
+
+# ---------------------------------------------------------------------------
+# device-resident trace view: one build + one host sort per (stats, raw)
+# ---------------------------------------------------------------------------
+
+def test_trace_view_built_once_per_stats_raw_pair(monkeypatch):
+    st, raw = _synth(n=2500, n_addr=200, seed=3)
+    calls = {"n": 0}
+    real = compose_engine._build_trace_view
+
+    def spy(stats, raw_, clock_hz):
+        calls["n"] += 1
+        return real(stats, raw_, clock_hz)
+
+    monkeypatch.setattr(compose_engine, "_build_trace_view", spy)
+    grid = DeviceGrid(mixes=(0.0, 1.0), retention_scales=(1.0,),
+                      per_mix=False)
+    cands = [c.devices for c in grid.candidates()]
+    # two policies, two grids, one (stats, raw) pair -> one view build
+    evaluate(cands, st, raw=raw, clock_hz=CLOCK,
+             policy="refresh-free", engine="jax")
+    evaluate(cands[:2], st, raw=raw, clock_hz=CLOCK,
+             policy="refresh-aware", engine="jax")
+    assert calls["n"] == 1
+    # a different trace is a different residence
+    st2, raw2 = _synth(n=2500, n_addr=200, seed=4)
+    evaluate(cands, st2, raw=raw2, clock_hz=CLOCK,
+             policy="refresh-free", engine="jax")
+    assert calls["n"] == 2
+
+
+# ---------------------------------------------------------------------------
+# thread-safety: 4-thread sweep == serial, bit for bit
+# ---------------------------------------------------------------------------
+
+class _FakeSession:
+    """Duck-types the slice of ProfileSession that run_session uses."""
+
+    def __init__(self, parts):
+        self._stats = parts
+        self._clock_hz = CLOCK
+
+    def _require_analyzed(self):
+        return None
+
+
+def test_threaded_jax_sweep_is_bit_identical_to_serial():
+    parts = {}
+    for i, (n, n_addr) in enumerate(
+            [(2000, 150), (2600, 220), (1800, 90), (3100, 310)]):
+        st, raw = _synth(n=n, n_addr=n_addr, seed=10 + i)
+        parts[f"sub{i}"] = (st, raw)
+    grid = DeviceGrid(mixes=(0.0, 1.0), retention_scales=(0.5, 2.0),
+                      per_mix=True)
+    serial = SweepRunner(grid, workers=1, engine="jax").run_session(
+        _FakeSession(parts))
+    threaded = SweepRunner(grid, workers=4, engine="jax").run_session(
+        _FakeSession(parts))
+    assert len(serial) == len(threaded) == len(grid) * 4
+    for ps, pt in zip(serial.points, threaded.points):
+        assert (ps.candidate, ps.subpartition) == (pt.candidate,
+                                                   pt.subpartition)
+        assert ps.composition.energy_j == pt.composition.energy_j
+        assert np.array_equal(ps.composition.capacity_fractions,
+                              pt.composition.capacity_fractions)
+
+
+# ---------------------------------------------------------------------------
+# padding property: bucket boundaries, masked tails, asymmetric devices
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_padding_never_leaks_across_bucket_boundaries():
+    asym = _asym_devices()
+    sram = asym[0]
+    # candidate lists straddling the c_pad=8 boundary (7 / 9 entries)
+    base_cands = [tuple(asym), tuple(asym[:2]), (sram,),
+                  tuple(asym[:3]), tuple(reversed(asym)),
+                  tuple(asym[1:]) + (sram,), tuple(asym[:2][::-1])]
+    nine_cands = base_cands + [tuple(asym[2:]) + (sram,), (sram, asym[1])]
+    # trace/address sizes just below / at / above the pow2 buckets,
+    # plus a tiny trace that is almost entirely masked tail
+    shapes = [(2047, 255), (2049, 257), (17, 3)]
+    for (n, n_addr), cands in zip(shapes,
+                                  [base_cands, nine_cands, base_cands]):
+        st, raw = _synth(n=n, n_addr=n_addr, seed=n)
+        for policy in ("refresh-free", "refresh-aware"):
+            for use_raw in (raw, None):
+                _assert_matches_oracle(cands, st, raw=use_raw,
+                                       policy=policy)
+
+
+@pytest.mark.slow
+def test_pareto_anchor_survives_padded_family_batch():
+    st, raw = _synth(n=2300, n_addr=180, seed=21)
+    grid = FamilyGrid("sot-mram", axes={"delta": (40.0, 55.0, 70.0)})
+    frontiers = []
+    for eng in ("numpy", "jax"):
+        pts = SweepRunner(grid, engine=eng).run_stats(
+            st, raw, clock_hz=CLOCK)
+        fr = pareto_frontier(pts)
+        assert fr.anchor is not None
+        assert fr.anchor.candidate == SRAM_ONLY_ID
+        assert fr.anchor.composition.area_vs_sram == 1.0
+        frontiers.append(fr)
+    ref, got = frontiers
+    assert [p.candidate for p in got.points] == [p.candidate
+                                                 for p in ref.points]
+    for a, b in zip(ref.points, got.points):
+        assert np.array_equal(a.composition.capacity_fractions,
+                              b.composition.capacity_fractions)
+
+
+# ---------------------------------------------------------------------------
+# campaign: shared persistent cache -> warm compiles in fresh workers
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_process_campaign_workers_share_persistent_cache(tmp_path):
+    from repro.launch.campaign import CampaignRunner
+
+    def campaign(store):
+        return CampaignRunner(
+            "polybench-2mm", ("systolic",), jobs=1,
+            cache_dir=str(tmp_path / store),
+            params={"polybench-2mm": {"ni": 24, "nj": 20, "nk": 16,
+                                      "nl": 28}},
+            backend_cfg={"systolic": {"rows": 16, "cols": 16}},
+            sweep_axes={"mixes": (0.0, 1.0), "retention_scales": (1.0,),
+                        "per_mix": False},
+            engine="jax", scheduler="process", lease_ttl_s=30.0,
+            compile_cache=str(tmp_path / "jax-cache")).run()
+
+    cold = campaign("store-a")
+    assert cold.executed == 1 and cold.failed == 0
+    (row,) = cold.aggregate["jobs"]
+    tele = row["compile_telemetry"]
+    assert tele["new_compiles"] > 0
+    assert tele["persistent_cache_misses"] > 0
+    assert tele["cache_dir"] == str(tmp_path / "jax-cache")
+
+    # a second campaign at a fresh artifact store re-executes the job
+    # in a brand-new worker process; every compile must come out of the
+    # shared persistent cache
+    warm = campaign("store-b")
+    assert warm.executed == 1 and warm.failed == 0
+    (row,) = warm.aggregate["jobs"]
+    tele = row["compile_telemetry"]
+    assert tele["persistent_cache_hits"] > 0
+    assert tele["persistent_cache_misses"] == 0
